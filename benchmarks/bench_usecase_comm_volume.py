@@ -1,0 +1,64 @@
+"""§5.3 use-case reproduction: communication-volume reduction for the three
+real-world workloads (Twitter TunkRank, CDR sliding-window, FEM biomedical).
+
+Paper claims: Twitter mean iteration 2.5s → 0.5s (5×, incl. overhead); CDR
+clique throughput >2×; FEM simulation speedup 2.44× after convergence — all
+driven by cut reduction since messages dominate (>80%) iteration time.
+We report remote-message-volume reduction + the modelled speedup
+(CommModel, 80/20 network/cpu split) per workload.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import CommModel
+from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
+from repro.core.vertex_program import message_volume
+from repro.graph import cut_ratio, generators
+
+
+def _workload(name, build, state_dim, k=9, quick=False):
+    g = build()
+    lab0 = initial_partition(g, k, "hsh")
+    part = AdaptivePartitioner(AdaptiveConfig(k=k, s=0.5,
+                                              max_iters=80 if quick else 180,
+                                              patience=20 if quick else 30))
+    state = part.init_state(g, lab0)
+    state, hist = part.run_to_convergence(g, state)
+    model = CommModel()
+    l0, r0 = message_volume(g, lab0, state_dim)
+    l1, r1 = message_volume(g, state.assignment, state_dim)
+    t0 = model.step_time(float(l0), float(r0))
+    t1 = model.step_time(float(l1), float(r1))
+    return {
+        "bench": "usecase", "workload": name,
+        "cut_before": round(float(cut_ratio(g, lab0)), 4),
+        "cut_after": round(float(cut_ratio(g, state.assignment)), 4),
+        "remote_bytes_before": float(r0), "remote_bytes_after": float(r1),
+        "remote_reduction_pct": round(100 * (1 - float(r1) / max(float(r0), 1)), 1),
+        "modelled_speedup": round(t0 / t1, 2),
+        "exec_time_reduction_pct": round(100 * (1 - t1 / t0), 1),
+        "adapt_iters": hist.iterations,
+    }
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows = [
+        _workload("twitter_tunkrank",
+                  lambda: generators.power_law(3000 if quick else 20000, seed=5),
+                  state_dim=1, quick=quick),
+        _workload("cdr_cliques",
+                  lambda: generators.power_law(2000 if quick else 10000,
+                                               seed=6, m=8),
+                  state_dim=32, quick=quick),   # clique lists are heavy msgs
+        _workload("fem_biomedical",
+                  lambda: generators.fem_cube(14 if quick else 28),
+                  state_dim=100, quick=quick),  # 100 state variables/cell
+    ]
+    for r in rows:
+        print(f"  usecase {r['workload']}: cut {r['cut_before']:.3f}->"
+              f"{r['cut_after']:.3f}, remote -{r['remote_reduction_pct']}%, "
+              f"modelled speedup {r['modelled_speedup']}x", flush=True)
+    return rows

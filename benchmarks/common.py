@@ -1,0 +1,45 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def save(name: str, payload: Any) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+class CommModel:
+    """Iteration-time model from the paper's observation that network
+    messages dominate (>80% of iteration time, §5.3): t = c_cpu·msgs_local +
+    c_net·msgs_remote, with c_net/c_cpu = 25 (≈ 10GbE RTT vs in-memory
+    hand-off). Used where wall-clock would only reflect this CPU container.
+    """
+
+    def __init__(self, c_cpu: float = 1.0, c_net: float = 25.0):
+        self.c_cpu = c_cpu
+        self.c_net = c_net
+
+    def step_time(self, local_msgs: float, remote_msgs: float,
+                  migrations: float = 0.0, c_mig: float = 50.0) -> float:
+        return (self.c_cpu * local_msgs + self.c_net * remote_msgs
+                + c_mig * migrations)

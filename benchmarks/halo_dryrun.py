@@ -1,0 +1,113 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimb cell 3 (paper-representative): gin-tu × ogb_products with
+the xDGP halo-exchange engine instead of GSPMD global gathers.
+
+Variants lowered on the single-pod mesh (256 devices ≡ 256 partitions):
+  baseline       — GSPMD gather aggregation (recorded by the main dry-run)
+  halo_hash      — halo engine, halo width from measured boundary fraction
+                   under HASH partitioning (≈ every node is boundary)
+  halo_adapted   — halo width from the xDGP-adapted partitioning (the
+                   paper's technique as a sharding pass)
+
+Halo widths come from results/boundary_fractions.json (measured on a
+250k-node Chung–Lu proxy at k=256 — methodology in EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m benchmarks.halo_dryrun
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.halo_gnn import abstract_dist_graph, gin_halo_loss
+from repro.launch.dryrun import parse_collective_bytes
+from repro.models.gnn import GINConfig, gin_init
+from repro.optim import AdamWConfig, apply_updates, init_state, warmup_cosine
+
+
+def lower_variant(name: str, P: int, n_blk: int, e_blk: int, halo: int,
+                  cfg: GINConfig):
+    mesh = jax.make_mesh((P,), ("nodes",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    dg = abstract_dist_graph(P, n_blk, e_blk, halo)
+    feats = jax.ShapeDtypeStruct((P * n_blk, cfg.d_in), jnp.float32)
+    labels = jax.ShapeDtypeStruct((P * n_blk,), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    ocfg = AdamWConfig()
+    abstract = jax.eval_shape(
+        lambda k: (lambda p: (p, init_state(p, ocfg)))(gin_init(k, cfg)), key)
+    params_s, opt_s = abstract
+    spec_n = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("nodes"))
+    spec_n2 = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("nodes", None))
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def train_step(params, opt, dg, feats, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: gin_halo_loss(p, dg, feats, labels, cfg, mesh))(params)
+        lr = warmup_cosine(opt.step, 100, 10_000)
+        new_p, new_opt = apply_updates(params, grads, opt, ocfg, lr)
+        return new_p, new_opt, loss
+
+    dg_sh = type(dg)(*([spec_n] * 8))
+    with mesh:
+        compiled = jax.jit(
+            train_step,
+            in_shardings=(jax.tree.map(lambda _: repl, params_s),
+                          jax.tree.map(lambda _: repl, opt_s), dg_sh,
+                          spec_n2, spec_n),
+            out_shardings=(jax.tree.map(lambda _: repl, params_s),
+                           jax.tree.map(lambda _: repl, opt_s), repl),
+        ).lower(params_s, opt_s, dg, feats, labels).compile()
+    coll = parse_collective_bytes(compiled.as_text())
+    ma = compiled.memory_analysis()
+    rec = {
+        "variant": name, "P": P, "n_blk": n_blk, "e_blk": e_blk, "halo": halo,
+        "collective_gb": coll["total_bytes"] / 1e9,
+        "per_kind": {k: v / 1e9 for k, v in coll["per_kind_bytes"].items() if v},
+        "temp_gb": ma.temp_size_in_bytes / 1e9,
+        "flops": float(compiled.cost_analysis().get("flops", 0.0)),
+    }
+    print(f"{name}: coll={rec['collective_gb']:.2f}GB temp={rec['temp_gb']:.2f}GB",
+          flush=True)
+    return rec
+
+
+def main() -> None:
+    """Boundary fractions (EXPERIMENTS.md §Perf cell 3 methodology):
+
+    * measured: power-law (ogb-family) graphs saturate at fraction ≈ 1.0 even
+      after adaptation (hubs touch every partition — consistent with the
+      paper's "power-law graphs are harder to partition"). The halo win for
+      that family is therefore nil and we report it honestly.
+    * measured: FEM-family fractions follow ~1.6 × surface/volume
+      (6/n_blk^{1/3}); validated at side 20/26, k=8 (0.70 / 0.73 measured vs
+      0.60 / 0.46 ideal). Extrapolations: ogb-scale blocks (9.6k nodes)
+      → 0.45; the paper's 100M-node biomedical FEM at k=256 (391k-node
+      blocks) → 0.13.
+    """
+    P = 256
+    cfg = GINConfig(n_layers=5, d_hidden=64, d_in=100, n_out=47,
+                    readout="none", remat=True)
+    rows = []
+    workloads = [
+        # (name, n, directed edges, adapted boundary fraction)
+        ("ogb_products_powerlaw", 2_449_029, 2 * 61_859_140, 1.0),
+        ("mesh_2.45M", 2_449_029, 2 * 3 * 2_449_029, 0.45),
+        ("fem_1e8_paper_scale", 100_000_000, 2 * 297_000_000, 0.13),
+    ]
+    for name, n, e_dir, frac_adapted in workloads:
+        n_blk = -(-n // P)
+        e_blk = -(-e_dir // P)
+        for variant, frac in (("halo_hash", 1.0), ("halo_adapted", frac_adapted)):
+            halo = max(128, int(np.ceil(n_blk * frac / 128) * 128))
+            rec = lower_variant(f"{name}:{variant}", P, n_blk, e_blk, halo, cfg)
+            rec["boundary_fraction"] = frac
+            rows.append(rec)
+    with open("results/halo_hillclimb.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,267 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single_pod_256]
+
+Three terms per (arch × shape × mesh), all in seconds-per-step-per-chip:
+
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_bytes / link_bw      (50 GB/s/link ICI)
+
+Sources: ``compiled.cost_analysis()`` per-device flops/bytes;
+collective bytes parsed from optimised HLO (dryrun.parse_collective_bytes).
+
+**Scan-body correction**: XLA's cost analysis counts a while-loop body ONCE
+regardless of trip count (calibrated in EXPERIMENTS.md §Dry-run). For
+scan-over-layers LMs we difference two lowerings (L and L//2 layers) to
+recover per-layer cost and extrapolate: total = outside + L·body. GNN/recsys
+models unroll natively — no correction. MODEL_FLOPS uses the standard
+6·N·D (dense) / 6·N_active·D (MoE) formulas for train; 2·N·D for inference.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12           # bf16 / chip
+HBM_BW = 819e9                # bytes/s / chip
+ICI_BW = 50e9                 # bytes/s / link (conservative single-link)
+
+
+def _param_counts():
+    """(total, active) params per LM arch; analytic for gnn/recsys."""
+    from repro.configs import registry
+    from repro.models import active_param_count, param_count
+    out = {}
+    for arch in ("granite-34b", "gemma2-9b", "phi4-mini-3.8b", "arctic-480b",
+                 "deepseek-v2-lite-16b"):
+        cfg = registry.get(arch).config()
+        out[arch] = (param_count(cfg), active_param_count(cfg))
+    return out
+
+
+def model_flops(arch: str, shape: Dict[str, Any], info: Dict[str, Any],
+                counts: Dict[str, tuple]) -> Optional[float]:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference forwards/steps."""
+    if arch in counts:
+        total, active = counts[arch]
+        n = active
+        kind = info.get("kind", "")
+        tokens = info.get("tokens", 0)
+        if kind == "train":
+            return 6.0 * n * tokens
+        return 2.0 * n * tokens
+    return None
+
+
+def analyze(results: Dict[str, Any], chips: int, lm_correction: Dict[str, float],
+            counts) -> Dict[str, Any]:
+    """Three roofline terms per cell.
+
+    compute:    scan-corrected HLO flops / peak.
+    memory:     HBM-traffic model from memory_analysis — (arguments + outputs
+                + 2·temps) / bandwidth. (XLA's "bytes accessed" counts
+                logical operand bytes pre-fusion and is not HBM traffic;
+                recorded in JSON as ``hlo_bytes_accessed_s`` for reference.)
+    collective: parsed HLO collective bytes / per-link ICI bandwidth.
+
+    roofline_fraction: for LM cells, MFU-at-bound = ideal MODEL_FLOPS time /
+    step lower bound (max of the three terms); for GNN/recsys, the
+    compute-share of the bound (how compute-limited the cell is).
+    """
+    table = {}
+    for key, rec in results.items():
+        if rec.get("status") != "OK":
+            table[key] = {"status": rec.get("status"),
+                          "skip_reason": rec.get("skip_reason")}
+            continue
+        arch, shape_name = key.split(":")
+        cost = rec.get("cost", {})
+        flops_dev = float(cost.get("flops", 0.0))
+        raw_bytes_dev = float(cost.get("bytes accessed", 0.0))
+        corr = lm_correction.get(key, 1.0)
+        flops_dev *= corr
+        mem = rec.get("memory", {})
+        traffic = ((mem.get("argument_bytes") or 0)
+                   + (mem.get("output_bytes") or 0)
+                   + 2 * (mem.get("temp_bytes") or 0))
+        coll_dev = float(rec.get("collectives", {}).get("total_bytes", 0))
+        t_compute = flops_dev / PEAK_FLOPS
+        t_memory = traffic / HBM_BW
+        t_coll = coll_dev / ICI_BW
+        dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                       (t_coll, "collective"))[1]
+        bound = max(t_compute, t_memory, t_coll, 1e-12)
+        mf = model_flops(arch, {}, rec.get("static_info", {}), counts)
+        if mf:
+            ideal = mf / chips / PEAK_FLOPS
+            frac = ideal / bound
+            useful = mf / (flops_dev * chips) if flops_dev else None
+        else:
+            frac = t_compute / bound
+            useful = None
+        table[key] = {
+            "status": "OK",
+            "compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant,
+            "step_lower_bound_s": bound,
+            "roofline_fraction": frac,
+            "model_flops": mf,
+            "useful_flops_ratio": useful,
+            "scan_correction": corr,
+            "hlo_bytes_accessed_s": raw_bytes_dev * corr / HBM_BW,
+            "temp_gb_per_dev": (mem.get("temp_bytes") or 0) / 1e9,
+        }
+    return table
+
+
+def scan_corrections(results: Dict[str, Any]) -> Dict[str, float]:
+    """Correction factor ≈ (outside + L·body)/(outside + body) estimated from
+    the arch layer count; body share measured per kind (documented in
+    EXPERIMENTS.md). We approximate body share via per-arch layer count:
+    reported ≈ outside + body, true ≈ outside + L·body. With lm_head
+    dominating `outside` for small models this is conservative."""
+    from repro.configs import registry
+    out = {}
+    for key, rec in results.items():
+        if rec.get("status") != "OK":
+            continue
+        arch = key.split(":")[0]
+        try:
+            mod = registry.get(arch)
+        except KeyError:
+            continue
+        if mod.FAMILY != "lm":
+            continue
+        cfg = mod.config()
+        kind = rec.get("static_info", {}).get("kind", "")
+        # measured decomposition (EXPERIMENTS §Dry-run): for train cells the
+        # scan body is ~(1-r) of reported cost with r the unscanned share.
+        # We lower-bound by assuming reported = outside + body and body from
+        # analytic per-layer share.
+        L = cfg.n_layers - cfg.moe_first_dense
+        out[key] = _measured_correction(arch, kind, L)
+    return out
+
+
+_CORRECTIONS_PATH = os.path.join("results", "scan_corrections.json")
+
+
+def _measured_correction(arch: str, kind: str, L: int) -> float:
+    """Load measured correction factors (produced by --calibrate)."""
+    if os.path.exists(_CORRECTIONS_PATH):
+        with open(_CORRECTIONS_PATH) as f:
+            data = json.load(f)
+        k = f"{arch}:{kind}"
+        if k in data:
+            return float(data[k])
+    return float(L)          # worst-case: everything is in the body
+
+
+def calibrate(mesh_name: str = "single_pod_256") -> None:
+    """Measure per-(arch, kind) scan-correction factors by differencing a
+    2-layer and 4-layer lowering of the same cell on the production mesh."""
+    import os as _os
+    _os.environ.setdefault("XLA_FLAGS",
+                           "--xla_force_host_platform_device_count=512")
+    import dataclasses as dc
+    import jax
+    from repro.configs import registry
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.configs.base import Cell
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi_pod_512"))
+    out = {}
+    for arch in ("granite-34b", "gemma2-9b", "phi4-mini-3.8b", "arctic-480b",
+                 "deepseek-v2-lite-16b"):
+        mod = registry.get(arch)
+        real_cfg = mod.config
+        for shape_name, shape in mod.SHAPES.items():
+            if mod.SKIPS.get(shape_name):
+                continue
+            kind = shape["kind"]
+            key = f"{arch}:{kind}"
+            if key in out:
+                continue
+            costs = {}
+            try:
+                # UNROLLED 2- and 4-layer lowerings: flops scale with L, so
+                # differencing recovers the true per-layer cost (under scan
+                # the body is counted once at any L — differencing measures 0)
+                for L, unroll in ((2, True), (4, True), (4, False)):
+                    def patched(L=L, unroll=unroll):
+                        cfg = real_cfg()
+                        nd = min(cfg.moe_first_dense, 1)
+                        return dc.replace(cfg, n_layers=L + nd,
+                                          unroll_layers=unroll)
+                    mod.config = patched
+                    cell = Cell(arch, shape_name, "lm", shape)
+                    spec = build_cell(cell, mesh)
+                    with mesh:
+                        c = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                                    out_shardings=spec.out_shardings,
+                                    donate_argnums=spec.donate_argnums
+                                    ).lower(*spec.args).compile()
+                    costs[(L, unroll)] = float(c.cost_analysis().get("flops", 0.0))
+            finally:
+                mod.config = real_cfg
+            body = max(costs[(4, True)] - costs[(2, True)], 0.0) / 2.0
+            outside = max(costs[(2, True)] - 2 * body, 0.0)
+            cfg = real_cfg()
+            L_full = cfg.n_layers - cfg.moe_first_dense
+            true_full = outside + L_full * body
+            # what the scan-based production lowering reports at L=4:
+            reported_l4 = costs[(4, False)]
+            reported_full = max(reported_l4, 1.0)   # scan: L-independent
+            corr = true_full / reported_full
+            out[key] = corr
+            print(f"calibrate {key}: body={body:.3g} outside={outside:.3g} "
+                  f"reported(scan)={reported_l4:.3g} correction x{corr:.1f}",
+                  flush=True)
+    os.makedirs("results", exist_ok=True)
+    with open(_CORRECTIONS_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod_256")
+    ap.add_argument("--calibrate", action="store_true")
+    ap.add_argument("--results", default="results")
+    args = ap.parse_args()
+    if args.calibrate:
+        calibrate(args.mesh)
+        return
+    path = os.path.join(args.results, f"dryrun_{args.mesh}.json")
+    with open(path) as f:
+        results = json.load(f)
+    chips = 512 if "multi" in args.mesh else 256
+    counts = _param_counts()
+    corr = scan_corrections(results)
+    table = analyze(results, chips, corr, counts)
+    out_path = os.path.join(args.results, f"roofline_{args.mesh}.json")
+    with open(out_path, "w") as f:
+        json.dump(table, f, indent=1, default=float)
+    # pretty print
+    hdr = (f"{'cell':38s} {'compute':>9s} {'memory':>9s} {'collect':>9s} "
+           f"{'dominant':>10s} {'roofl%':>7s} {'useful%':>8s}")
+    print(hdr)
+    for key in sorted(table):
+        r = table[key]
+        if r.get("status") != "OK":
+            print(f"{key:38s} {r.get('status')}")
+            continue
+        rf = r["roofline_fraction"]
+        uf = r["useful_flops_ratio"]
+        print(f"{key:38s} {r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+              f"{r['collective_s']:9.4f} {r['dominant']:>10s} "
+              f"{100 * (rf or 0):6.1f}% "
+              f"{('%7.1f%%' % (100 * uf)) if uf else '     - '}")
+
+
+if __name__ == "__main__":
+    main()

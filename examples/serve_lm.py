@@ -1,0 +1,29 @@
+"""Continuous-batching LM serving demo (deliverable (b), serving flavour).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+
+from repro.models import TransformerConfig, init_params
+from repro.serve import Request, ServeEngine
+
+
+def main() -> None:
+    cfg = TransformerConfig(name="serve-demo", n_layers=4, d_model=128,
+                            n_heads=4, n_kv_heads=2, head_dim=32, d_ff=512,
+                            vocab=1024)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=4, max_seq=128)
+    rng = np.random.default_rng(0)
+    for uid in range(10):
+        engine.submit(Request(uid=uid,
+                              prompt=rng.integers(1, 1024, rng.integers(2, 8)),
+                              max_new_tokens=int(rng.integers(4, 12))))
+    done = engine.run_until_drained()
+    for c in sorted(done, key=lambda c: c.uid):
+        print(f"request {c.uid}: {len(c.tokens)} tokens -> {c.tokens}")
+
+
+if __name__ == "__main__":
+    main()

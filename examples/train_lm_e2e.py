@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with checkpoint/restart fault tolerance (deliverable (b)).
+
+  PYTHONPATH=src python examples/train_lm_e2e.py [--steps 300] [--fail-at 150]
+
+The model is a scaled-down phi4-mini-family decoder (~100M params). A worker
+failure is injected mid-run; the Trainer restores the last checkpoint and
+finishes. Loss curve is printed every 20 steps.
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.data import TokenStream
+from repro.models import TransformerConfig, init_params, lm_loss, param_count
+from repro.optim import AdamWConfig
+from repro.train import (FailureInjector, TrainConfig, Trainer, TrainerConfig,
+                         make_train_state, make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fail-at", type=int, default=150)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--size", choices=["demo", "100m"], default="demo",
+                    help="'100m' is the deliverable config (use on real "
+                         "hardware); 'demo' (~15M params) runs in minutes "
+                         "on this CPU container")
+    args = ap.parse_args()
+
+    if args.size == "100m":
+        cfg = TransformerConfig(
+            name="lm-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab=32768, mlp_kind="swiglu",
+            tie_embeddings=True)
+        seq_len, batch = 256, 8
+    else:
+        cfg = TransformerConfig(
+            name="lm-demo", n_layers=6, d_model=256, n_heads=4, n_kv_heads=2,
+            head_dim=64, d_ff=1024, vocab=8192, mlp_kind="swiglu",
+            tie_embeddings=True)
+        seq_len, batch = 128, 8
+    print(f"params: {param_count(cfg):,}")
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=3e-4, quantize_moments=True),
+                       warmup_steps=50, total_steps=args.steps)
+    state = make_train_state(params, tcfg)
+    stream = TokenStream(vocab=cfg.vocab, seq_len=seq_len, batch=batch, seed=0)
+    step_fn = make_train_step(lambda p, b: lm_loss(p, b, cfg), tcfg)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="lm100m_")
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, checkpoint_every=50,
+                      checkpoint_dir=ckpt_dir, log_every=20),
+        step_fn, stream.batch_at,
+        injector=FailureInjector(fail_at=(args.fail_at,)) if args.fail_at else None)
+    state = trainer.run(state)
+    print(f"restarts: {trainer.restarts}, straggler steps: {trainer.straggler_steps}")
+    for m in trainer.metrics_log:
+        print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"({m['sec_per_step']*1e3:.0f} ms/step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128 experts top-2 + dense residual (hf:Snowflake/snowflake-arctic-base).
+
+Dense-MoE hybrid: every layer sums a dense SwiGLU FFN (d_ff 4864) with a
+128-expert top-2 MoE whose experts share that hidden size. ~479B total
+params, ~17B active/token. long_500k SKIPPED: pure full attention.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import LM_SHAPES
+from repro.models import MoEConfig, TransformerConfig
+
+ARCH_ID = "arctic-480b"
+FAMILY = "lm"
+SHAPES = {k: v for k, v in LM_SHAPES.items()}
+SKIPS = {"long_500k": "pure full-attention arch (no sub-quadratic path)"}
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+        head_dim=128, d_ff=4864, vocab=32000, mlp_kind="swiglu",
+        moe=MoEConfig(n_experts=128, top_k=2, d_ff=4864,
+                      capacity_factor=1.25, dispatch="sharded"),
+        moe_dense_residual=True, tie_embeddings=False,
+        param_dtype=jnp.bfloat16, remat=True, q_chunk=2048, loss_chunk=512)
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, mlp_kind="swiglu",
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff=128, dispatch="sorted"),
+        moe_dense_residual=True, tie_embeddings=False)

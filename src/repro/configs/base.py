@@ -1,0 +1,56 @@
+"""Config registry scaffolding for the assigned architectures.
+
+Each ``configs/<arch>.py`` module exposes:
+  * ``ARCH_ID``      — public id (e.g. "granite-34b")
+  * ``FAMILY``       — "lm" | "gnn" | "recsys"
+  * ``config()``     — the exact assigned full-scale config
+  * ``smoke()``      — reduced same-family config for CPU smoke tests
+  * ``SHAPES``       — {shape_name: dict} input-shape cells for the dry-run
+
+Shape-cell conventions (DESIGN.md §4):
+  lm:     train_4k → train_step, prefill_32k → prefill, decode_32k/long_500k
+          → serve_step. long_500k only for hybrid/sub-quadratic attention.
+  gnn:    full_graph_sm / ogb_products → full-batch train_step,
+          minibatch_lg → sampled-block train_step, molecule → batched graphs.
+  recsys: train_batch → train_step, serve_* / retrieval_cand → serve fns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+LM_SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+GNN_SHAPES: Dict[str, Dict[str, Any]] = {
+    "full_graph_sm": dict(kind="full", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(kind="minibatch", n_nodes=232_965,
+                         n_edges=114_615_892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=602, n_classes=41),
+    "ogb_products": dict(kind="full", n_nodes=2_449_029, n_edges=61_859_140,
+                         d_feat=100, n_classes=47),
+    "molecule": dict(kind="graphs", n_nodes=30, n_edges=64, batch=128,
+                     d_feat=16, n_out=1),
+}
+
+RECSYS_SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One (architecture × input-shape) dry-run cell."""
+    arch_id: str
+    shape_name: str
+    family: str
+    shape: Dict[str, Any]
+    skip: Optional[str] = None      # reason, if inapplicable

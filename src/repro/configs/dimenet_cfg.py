@@ -1,0 +1,26 @@
+"""dimenet [gnn]: 6 blocks d_hidden=128 n_bilinear=8 n_spherical=7
+n_radial=6 (arXiv:2003.03123).
+
+Non-molecular shapes get synthesised 3-D positions and a per-edge triplet
+budget of 20 (DESIGN.md §4) — DimeNet's triplet count is Σdeg², intractable
+verbatim on ogb_products.
+"""
+from repro.configs.base import GNN_SHAPES
+from repro.models.dimenet import DimeNetConfig
+
+ARCH_ID = "dimenet"
+FAMILY = "gnn"
+SHAPES = {k: v for k, v in GNN_SHAPES.items()}
+SKIPS = {}
+TRIPLETS_PER_EDGE = 20            # static triplet budget per directed edge
+
+
+def config(d_in: int = 100, n_out: int = 47, readout: str = "none") -> DimeNetConfig:
+    return DimeNetConfig(n_blocks=6, d_hidden=128, n_bilinear=8,
+                         n_spherical=7, n_radial=6, d_in=d_in, n_out=n_out,
+                         readout=readout)
+
+
+def smoke() -> DimeNetConfig:
+    return DimeNetConfig(n_blocks=2, d_hidden=16, n_bilinear=4,
+                         n_spherical=3, n_radial=3, d_in=8, n_out=1)

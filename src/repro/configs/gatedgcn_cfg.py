@@ -1,0 +1,17 @@
+"""gatedgcn [gnn]: 16L d_hidden=70 gated aggregation (arXiv:2003.00982)."""
+from repro.configs.base import GNN_SHAPES
+from repro.models.gnn import GatedGCNConfig
+
+ARCH_ID = "gatedgcn"
+FAMILY = "gnn"
+SHAPES = {k: v for k, v in GNN_SHAPES.items()}
+SKIPS = {}
+
+
+def config(d_in: int = 100, n_out: int = 47, readout: str = "none") -> GatedGCNConfig:
+    return GatedGCNConfig(n_layers=16, d_hidden=70, d_in=d_in, n_out=n_out,
+                          readout=readout)
+
+
+def smoke() -> GatedGCNConfig:
+    return GatedGCNConfig(n_layers=3, d_hidden=16, d_in=8, n_out=4)

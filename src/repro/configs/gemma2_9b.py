@@ -1,0 +1,33 @@
+"""gemma2-9b [dense]: 42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000.
+
+Local(4096)+global alternating attention, attn softcap 50 / final softcap 30,
+sandwich RMSNorms, GeGLU, sqrt(d)-scaled tied embeddings (arXiv:2408.00118).
+long_500k RUNS: hybrid local/global layers give the sub-quadratic path.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import LM_SHAPES
+from repro.models import TransformerConfig
+
+ARCH_ID = "gemma2-9b"
+FAMILY = "lm"
+SHAPES = {k: v for k, v in LM_SHAPES.items()}
+SKIPS = {}
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8,
+        head_dim=256, d_ff=14336, vocab=256000, mlp_kind="geglu",
+        attn_softcap=50.0, final_softcap=30.0, local_window=4096,
+        layer_pattern="local_global", post_norm=True, embed_scale=True,
+        tie_embeddings=True, param_dtype=jnp.bfloat16, remat=True,
+        q_chunk=2048, loss_chunk=512)
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=4, d_model=96, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab=512, mlp_kind="geglu",
+        attn_softcap=50.0, final_softcap=30.0, local_window=8,
+        layer_pattern="local_global", post_norm=True, embed_scale=True)

@@ -1,0 +1,18 @@
+"""gin-tu [gnn]: 5L d_hidden=64 sum aggregation, learnable eps
+(arXiv:1810.00826)."""
+from repro.configs.base import GNN_SHAPES
+from repro.models.gnn import GINConfig
+
+ARCH_ID = "gin-tu"
+FAMILY = "gnn"
+SHAPES = {k: v for k, v in GNN_SHAPES.items()}
+SKIPS = {}
+
+
+def config(d_in: int = 100, n_out: int = 47, readout: str = "none") -> GINConfig:
+    return GINConfig(n_layers=5, d_hidden=64, d_in=d_in, n_out=n_out,
+                     readout=readout)
+
+
+def smoke() -> GINConfig:
+    return GINConfig(n_layers=2, d_hidden=16, d_in=8, n_out=4)

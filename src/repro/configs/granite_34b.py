@@ -1,0 +1,30 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
+
+GPT-BigCode-style code model (arXiv:2405.04324): MQA + GELU MLP (the 34B
+parameter count matches the non-gated 4×d FFN), untied LM head.
+long_500k SKIPPED: pure full attention (DESIGN.md §4).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import LM_SHAPES
+from repro.models import TransformerConfig
+
+ARCH_ID = "granite-34b"
+FAMILY = "lm"
+SHAPES = {k: v for k, v in LM_SHAPES.items()}
+SKIPS = {"long_500k": "pure full-attention arch (no sub-quadratic path)"}
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+        head_dim=128, d_ff=24576, vocab=49152, mlp_kind="gelu",
+        tie_embeddings=False, param_dtype=jnp.bfloat16, remat=True,
+        q_chunk=2048, loss_chunk=512)
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=3, d_model=128, n_heads=4,
+        n_kv_heads=1, head_dim=32, d_ff=512, vocab=512, mlp_kind="gelu",
+        tie_embeddings=False)

@@ -1,0 +1,27 @@
+"""phi4-mini-3.8b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064 — RoPE SwiGLU GQA, tied embeddings (arXiv:2412.08905).
+long_500k SKIPPED: pure full attention.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import LM_SHAPES
+from repro.models import TransformerConfig
+
+ARCH_ID = "phi4-mini-3.8b"
+FAMILY = "lm"
+SHAPES = {k: v for k, v in LM_SHAPES.items()}
+SKIPS = {"long_500k": "pure full-attention arch (no sub-quadratic path)"}
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+        head_dim=128, d_ff=8192, vocab=200064, mlp_kind="swiglu",
+        tie_embeddings=True, param_dtype=jnp.bfloat16, remat=True,
+        q_chunk=2048, loss_chunk=512)
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=3, d_model=96, n_heads=6,
+        n_kv_heads=2, head_dim=16, d_ff=256, vocab=512, mlp_kind="swiglu")

@@ -1,0 +1,19 @@
+"""pna [gnn]: 4L d_hidden=75, aggregators mean-max-min-std,
+scalers id-amp-atten (arXiv:2004.05718)."""
+from repro.configs.base import GNN_SHAPES
+from repro.models.gnn import PNAConfig
+
+ARCH_ID = "pna"
+FAMILY = "gnn"
+SHAPES = {k: v for k, v in GNN_SHAPES.items()}
+SKIPS = {}
+
+
+def config(d_in: int = 100, n_out: int = 47, readout: str = "none",
+           avg_log_deg: float = 3.0) -> PNAConfig:
+    return PNAConfig(n_layers=4, d_hidden=75, d_in=d_in, n_out=n_out,
+                     readout=readout, avg_log_deg=avg_log_deg)
+
+
+def smoke() -> PNAConfig:
+    return PNAConfig(n_layers=2, d_hidden=16, d_in=8, n_out=4)

@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import (arctic_480b, deepseek_v2_lite, dimenet_cfg,
+                           gatedgcn_cfg, gemma2_9b, gin_tu, granite_34b,
+                           phi4_mini, pna_cfg, two_tower)
+from repro.configs.base import Cell
+
+MODULES = {
+    m.ARCH_ID: m
+    for m in (granite_34b, gemma2_9b, phi4_mini, arctic_480b,
+              deepseek_v2_lite, pna_cfg, dimenet_cfg, gatedgcn_cfg, gin_tu,
+              two_tower)
+}
+
+ARCH_IDS = list(MODULES)
+
+
+def get(arch_id: str):
+    if arch_id not in MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return MODULES[arch_id]
+
+
+def all_cells(include_skipped: bool = True) -> List[Cell]:
+    """The 40 (arch × shape) dry-run cells, with skip annotations."""
+    cells: List[Cell] = []
+    for arch_id, mod in MODULES.items():
+        for shape_name, shape in mod.SHAPES.items():
+            skip = mod.SKIPS.get(shape_name)
+            if skip and not include_skipped:
+                continue
+            cells.append(Cell(arch_id=arch_id, shape_name=shape_name,
+                              family=mod.FAMILY, shape=shape, skip=skip))
+    return cells

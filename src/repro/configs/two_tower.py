@@ -1,0 +1,39 @@
+"""two-tower-retrieval [recsys]: embed_dim=256, tower MLP 1024-512-256,
+dot interaction, sampled softmax (RecSys'19 YouTube retrieval)."""
+from repro.configs.base import RECSYS_SHAPES
+from repro.models.recsys import FeatureSpec, TwoTowerConfig
+
+ARCH_ID = "two-tower-retrieval"
+FAMILY = "recsys"
+SHAPES = {k: v for k, v in RECSYS_SHAPES.items()}
+SKIPS = {}
+
+
+def config() -> TwoTowerConfig:
+    return TwoTowerConfig(
+        embed_dim=256, tower_mlp=(1024, 512, 256),
+        user_features=(
+            FeatureSpec("user_id", 10_000_000, 128),
+            FeatureSpec("user_geo", 100_000, 32),
+            FeatureSpec("user_hist", 2_000_000, 64, n_hot=16),
+            FeatureSpec("user_device", 64, 16),
+        ),
+        item_features=(
+            FeatureSpec("item_id", 2_000_000, 128),
+            FeatureSpec("item_topic", 50_000, 64),
+            FeatureSpec("item_creator", 500_000, 48),
+        ),
+        n_dense_user=8, n_dense_item=4)
+
+
+def smoke() -> TwoTowerConfig:
+    return TwoTowerConfig(
+        embed_dim=32, tower_mlp=(64, 32),
+        user_features=(FeatureSpec("user_id", 1000, 16),
+                       FeatureSpec("user_geo", 50, 8),
+                       FeatureSpec("user_hist", 500, 16, n_hot=4),
+                       FeatureSpec("user_device", 8, 4)),
+        item_features=(FeatureSpec("item_id", 800, 16),
+                       FeatureSpec("item_topic", 40, 8),
+                       FeatureSpec("item_creator", 60, 8)),
+        n_dense_user=4, n_dense_item=2)

@@ -1,0 +1,16 @@
+"""xDGP core: adaptive iterative graph (re)partitioning (the paper's contribution)."""
+from repro.core.partition_state import (PartitionState, default_capacity,
+                                        imbalance, make_state, occupancy)
+from repro.core.migration import (MigrationStats, flush_pending,
+                                  greedy_targets, migrate_step,
+                                  neighbour_partition_counts)
+from repro.core.initial import STRATEGIES, initial_partition
+from repro.core.repartitioner import (AdaptiveConfig, AdaptivePartitioner,
+                                      History, converge_jit)
+
+__all__ = [
+    "PartitionState", "default_capacity", "imbalance", "make_state", "occupancy",
+    "MigrationStats", "flush_pending", "greedy_targets", "migrate_step",
+    "neighbour_partition_counts", "STRATEGIES", "initial_partition",
+    "AdaptiveConfig", "AdaptivePartitioner", "History", "converge_jit",
+]

@@ -1,0 +1,117 @@
+"""Beyond-paper: MoE expert placement via the xDGP migration heuristic.
+
+The token→expert routing of a top-k MoE induces a weighted co-activation
+graph over experts: experts that fire for the same token exchange activations
+through the same all_to_all. Placing co-activated experts on the same device
+(while keeping per-device expert load balanced) reduces cross-device dispatch
+traffic — a dynamic partitioning problem with exactly the paper's structure:
+
+  vertices   = experts (weighted by routing load)
+  edges      = co-routing counts (experts chosen together for one token)
+  partitions = devices, capacity = experts/device (hard balance)
+  dynamism   = routing statistics drift during training → re-adapt online
+
+DESIGN.md §4 marks the core technique inapplicable to MoE *models*; this is
+its transfer to the *placement* layer. Used by examples and tested in
+tests/test_expert_placement.py; wiring it into the dispatch permutation is a
+one-line gather on the expert axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition_state import make_state
+from repro.core.repartitioner import AdaptiveConfig, AdaptivePartitioner
+from repro.graph.structure import Graph, from_edges
+
+
+def co_routing_graph(expert_choices: np.ndarray, n_experts: int,
+                     max_edges: int = 100_000) -> Tuple[Graph, np.ndarray]:
+    """Build the expert co-activation graph from routing decisions.
+
+    expert_choices: (T, k) int array of per-token top-k expert ids.
+    Returns (graph over experts, per-expert load).
+    """
+    t, k = expert_choices.shape
+    load = np.bincount(expert_choices.reshape(-1), minlength=n_experts)
+    srcs, dsts, counts = [], [], {}
+    for a in range(k):
+        for b in range(a + 1, k):
+            pairs = expert_choices[:, [a, b]]
+            lo = pairs.min(1)
+            hi = pairs.max(1)
+            key = lo.astype(np.int64) * n_experts + hi
+            uniq, cnt = np.unique(key, return_counts=True)
+            for u, c in zip(uniq, cnt):
+                counts[int(u)] = counts.get(int(u), 0) + int(c)
+    # keep the strongest co-activations (cap for static shapes)
+    items = sorted(counts.items(), key=lambda kv: -kv[1])[:max_edges]
+    src = np.array([u // n_experts for u, _ in items], np.int64)
+    dst = np.array([u % n_experts for u, _ in items], np.int64)
+    return from_edges(src, dst, n_experts), load
+
+
+def place_experts(expert_choices: np.ndarray, n_experts: int, n_devices: int,
+                  adapt_iters: int = 80, seed: int = 0
+                  ) -> Tuple[np.ndarray, dict]:
+    """Returns (placement (E,) device id per expert, report).
+
+    Balance is hard: exactly E/n_devices experts per device (capacity slack
+    0 + final greedy fix-up), matching the fixed expert-parallel layout.
+    """
+    if n_experts % n_devices:
+        raise ValueError("n_experts must divide n_devices")
+    g, load = co_routing_graph(expert_choices, n_experts)
+    per = n_experts // n_devices
+    # initial: contiguous blocks (the default layout)
+    init = (np.arange(n_experts) // per).astype(np.int32)
+    part = AdaptivePartitioner(AdaptiveConfig(
+        k=n_devices, s=0.5, max_iters=adapt_iters,
+        patience=adapt_iters, seed=seed))
+    # soft capacity during adaptation: quotas are floor(free/(k-1)), so the
+    # head-room must be at least k-1 for any move to be admitted; the
+    # fix-up below restores exact balance afterwards
+    cap = per + max(n_devices - 1, per // 4)
+    state = make_state(g, jnp.asarray(init), n_devices, seed=seed,
+                       capacity=jnp.full((n_devices,), cap, jnp.int32))
+    state, hist = part.adapt(g, state, adapt_iters)
+    placement = np.asarray(state.assignment)[:n_experts].copy()
+    # hard fix-up: enforce exact per-device count (move overflow greedily)
+    counts = np.bincount(placement, minlength=n_devices)
+    over = [d for d in range(n_devices) if counts[d] > per]
+    under = [d for d in range(n_devices) if counts[d] < per]
+    for d in over:
+        extra = np.flatnonzero(placement == d)[per:]
+        for e in extra:
+            tgt = under[0]
+            placement[e] = tgt
+            counts[tgt] += 1
+            if counts[tgt] == per:
+                under.pop(0)
+    report = {
+        "cross_traffic_before": _cross_traffic(expert_choices, init, n_devices),
+        "cross_traffic_after": _cross_traffic(expert_choices, placement,
+                                              n_devices),
+        "iters": hist.iterations,
+    }
+    report["reduction_pct"] = round(
+        100 * (1 - report["cross_traffic_after"] /
+               max(report["cross_traffic_before"], 1)), 1)
+    return placement, report
+
+
+def _cross_traffic(expert_choices: np.ndarray, placement: np.ndarray,
+                   n_devices: int) -> int:
+    """Pairs of same-token expert choices landing on different devices."""
+    t, k = expert_choices.shape
+    dev = placement[expert_choices]                      # (T, k)
+    cross = 0
+    for a in range(k):
+        for b in range(a + 1, k):
+            cross += int((dev[:, a] != dev[:, b]).sum())
+    return cross

@@ -1,0 +1,122 @@
+"""Initial partitioning strategies evaluated in the paper (§5.2.1, Fig. 5).
+
+* HSH — modulo hash of a mixed vertex id (the de-facto standard; scatters).
+* RND — pseudorandom balanced assignment.
+* DGR — streaming "linear deterministic greedy" (Stanton & Kliot, KDD'12).
+* MNN — streaming "minimum number of neighbours" (Prabhakaran et al., ATC'12).
+
+DGR/MNN are host-side streaming passes (they are *initial* partitioners and
+the paper itself notes they need full graph knowledge, limiting scalability).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.structure import Graph, to_csr
+
+
+def _mix(ids: np.ndarray) -> np.ndarray:
+    """64-bit splitmix-style mixer so sequential ids scatter like real hashes."""
+    x = ids.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return x
+
+
+def hash_partition(graph: Graph, k: int) -> jnp.ndarray:
+    """HSH: H(v) mod k."""
+    ids = np.arange(graph.n_cap, dtype=np.int64)
+    lab = (_mix(ids) % np.uint64(k)).astype(np.int32)
+    return jnp.asarray(lab)
+
+
+def modulo_partition(graph: Graph, k: int) -> jnp.ndarray:
+    """Plain v mod k (no mixing) — keeps sequential locality; for ablations."""
+    ids = np.arange(graph.n_cap, dtype=np.int64)
+    return jnp.asarray((ids % k).astype(np.int32))
+
+
+def block_partition(graph: Graph, k: int) -> jnp.ndarray:
+    """Contiguous blocks of ids (what a range-sharded store would do)."""
+    ids = np.arange(graph.n_cap, dtype=np.int64)
+    per = -(-graph.n_cap // k)
+    return jnp.asarray(np.minimum(ids // per, k - 1).astype(np.int32))
+
+
+def random_partition(graph: Graph, k: int, seed: int = 0) -> jnp.ndarray:
+    """RND: balanced pseudorandom assignment (shuffle + round-robin)."""
+    rng = np.random.default_rng(seed)
+    n = graph.n_cap
+    lab = np.arange(n, dtype=np.int64) % k
+    rng.shuffle(lab)
+    return jnp.asarray(lab.astype(np.int32))
+
+
+def _streaming(graph: Graph, k: int, mode: str, slack: float = 0.1,
+               seed: int = 0) -> jnp.ndarray:
+    indptr, indices = to_csr(graph)
+    node_mask = np.asarray(graph.node_mask)
+    n_cap = graph.n_cap
+    n_live = int(node_mask.sum())
+    cap = int(round(-(-n_live // k) * (1.0 + slack))) + 1
+    sizes = np.zeros(k, dtype=np.int64)
+    lab = np.full(n_cap, -1, dtype=np.int32)
+    rng = np.random.default_rng(seed)
+    order = np.flatnonzero(node_mask)
+    counts = np.zeros(k, dtype=np.int64)
+    for v in order:
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        counts[:] = 0
+        if nbrs.size:
+            placed = lab[nbrs]
+            placed = placed[placed >= 0]
+            if placed.size:
+                np.add.at(counts, placed, 1)
+        room = sizes < cap
+        if mode == "dgr":
+            # linear deterministic greedy: |N(v) ∩ P_i| * (1 - |P_i|/C)
+            score = counts * (1.0 - sizes / cap)
+            score = np.where(room, score, -np.inf)
+            best = int(np.argmax(score))
+            if not np.isfinite(score[best]):
+                best = int(np.argmin(sizes))
+        elif mode == "mnn":
+            # minimum number of neighbours among partitions with room
+            score = np.where(room, counts, np.iinfo(np.int64).max)
+            best = int(np.argmin(score))
+        else:
+            raise ValueError(mode)
+        lab[v] = best
+        sizes[best] += 1
+    # padding slots: hash them so future node additions have a home
+    pad = lab < 0
+    if pad.any():
+        ids = np.flatnonzero(pad).astype(np.int64)
+        lab[pad] = (_mix(ids) % np.uint64(k)).astype(np.int32)
+    return jnp.asarray(lab)
+
+
+def deterministic_greedy(graph: Graph, k: int, slack: float = 0.1) -> jnp.ndarray:
+    """DGR (Stanton & Kliot linear deterministic greedy), streaming."""
+    return _streaming(graph, k, "dgr", slack)
+
+
+def min_neighbours(graph: Graph, k: int, slack: float = 0.1) -> jnp.ndarray:
+    """MNN streaming heuristic."""
+    return _streaming(graph, k, "mnn", slack)
+
+
+STRATEGIES = {
+    "hsh": hash_partition,
+    "rnd": random_partition,
+    "dgr": deterministic_greedy,
+    "mnn": min_neighbours,
+    "mod": modulo_partition,
+    "blk": block_partition,
+}
+
+
+def initial_partition(graph: Graph, k: int, strategy: str = "hsh", **kw) -> jnp.ndarray:
+    return STRATEGIES[strategy](graph, k, **kw)

@@ -1,0 +1,84 @@
+"""Partition state for the xDGP adaptive repartitioner (paper §3).
+
+The state is a pytree so the whole iterate → converge loop can live inside
+jit / lax.while_loop, and so it shards cleanly over a device mesh (node-slot
+arrays are sharded on their leading axis by the distributed engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structure import Graph
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PartitionState:
+    """Full state of the adaptive partitioner.
+
+    Attributes:
+      assignment: (n_cap,) int32 — current partition of every node slot.
+      pending:    (n_cap,) int32 — deferred destination decided last iteration
+                  (-1 = no pending move). Paper §4.2 "Deferred Vertex Migration":
+                  decisions taken at t are committed at t+1 so message routing
+                  never races placement.
+      capacity:   (k,) int32 — hard per-partition capacity C^i (paper §3.3).
+      rng:        PRNG key for the Bernoulli(s) damping (paper §3.4).
+      iteration:  scalar int32 — iteration counter t.
+      last_moves: scalar int32 — number of migrations committed at the last
+                  commit phase (convergence detection, paper: 30 quiet iters).
+    """
+
+    assignment: jax.Array
+    pending: jax.Array
+    capacity: jax.Array
+    rng: jax.Array
+    iteration: jax.Array
+    last_moves: jax.Array
+
+    @property
+    def k(self) -> int:
+        return self.capacity.shape[0]
+
+    @property
+    def n_cap(self) -> int:
+        return self.assignment.shape[0]
+
+
+def default_capacity(num_nodes: int, k: int, slack: float = 0.1) -> jax.Array:
+    """Balanced capacity with head-room: C^i = ceil(|V|/k · (1+slack))."""
+    per = int(-(-num_nodes // k))  # ceil
+    cap = int(round(per * (1.0 + slack))) + 1
+    return jnp.full((k,), cap, dtype=jnp.int32)
+
+
+def make_state(graph: Graph, assignment: jax.Array, k: int,
+               slack: float = 0.1, seed: int = 0,
+               capacity: Optional[jax.Array] = None) -> PartitionState:
+    n_live = int(jax.device_get(graph.num_nodes))
+    cap = capacity if capacity is not None else default_capacity(n_live, k, slack)
+    return PartitionState(
+        assignment=assignment.astype(jnp.int32),
+        pending=jnp.full((graph.n_cap,), -1, jnp.int32),
+        capacity=cap.astype(jnp.int32),
+        rng=jax.random.PRNGKey(seed),
+        iteration=jnp.zeros((), jnp.int32),
+        last_moves=jnp.zeros((), jnp.int32),
+    )
+
+
+def occupancy(state: PartitionState, node_mask: jax.Array) -> jax.Array:
+    """|P^i(t)| for every partition (live nodes only)."""
+    lab = jnp.where(node_mask, state.assignment, state.k)
+    return jax.ops.segment_sum(jnp.ones_like(lab), lab, num_segments=state.k + 1)[: state.k]
+
+
+def imbalance(state: PartitionState, node_mask: jax.Array) -> jax.Array:
+    """max/mean occupancy — load-balance quality metric."""
+    occ = occupancy(state, node_mask)
+    mean = jnp.maximum(jnp.sum(occ) / state.k, 1)
+    return jnp.max(occ) / mean

@@ -1,0 +1,139 @@
+"""Partition → device placement and locality-preserving reordering.
+
+The bridge between the paper's logical partitions and the TPU mesh: a
+partition is a contiguous block of node *slots* on one device (or device
+group). After the adaptive heuristic improves the assignment, ``relocation``
+computes the permutation that makes each partition contiguous — the SPMD
+analogue of physically migrating vertices between workers. The permutation's
+cross-block traffic is exactly the migration volume the paper identifies as
+the dominant overhead (§5.2.3), and we report it as such.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph
+
+
+class Relocation(NamedTuple):
+    perm: jax.Array          # (n_cap,) new_slot -> old_slot (gather indices)
+    inv_perm: jax.Array      # (n_cap,) old_slot -> new_slot
+    block_of: jax.Array      # (n_cap,) partition id per NEW slot
+    moved: jax.Array         # () int32 — slots whose partition block changed
+    moved_bytes_per_unit: jax.Array  # () int32 — same, for traffic accounting
+
+
+def plan_relocation(graph: Graph, assignment: jax.Array, k: int) -> Relocation:
+    """Stable sort nodes by partition id → contiguous blocks per partition.
+
+    Padding slots sort to the end of their partition block (they keep their
+    assignment so future additions inherit a home partition).
+    """
+    n_cap = assignment.shape[0]
+    key = assignment.astype(jnp.int32) * 2 + (~graph.node_mask).astype(jnp.int32)
+    perm = jnp.argsort(key, stable=True)
+    inv_perm = jnp.zeros((n_cap,), jnp.int32).at[perm].set(
+        jnp.arange(n_cap, dtype=jnp.int32))
+    block_of = assignment[perm]
+    old_block = jnp.arange(n_cap) * k // n_cap  # previous contiguous blocking
+    moved = jnp.sum((inv_perm != jnp.arange(n_cap)) & graph.node_mask)
+    return Relocation(perm=perm, inv_perm=inv_perm, block_of=block_of,
+                      moved=moved.astype(jnp.int32),
+                      moved_bytes_per_unit=moved.astype(jnp.int32))
+
+
+def apply_relocation(graph: Graph, reloc: Relocation,
+                     features: jax.Array) -> Tuple[Graph, jax.Array]:
+    """Permute node storage (features + edge endpoints) to the new layout.
+
+    In the distributed engine this gather is an ``all_to_all`` between device
+    blocks — the physical vertex migration.
+    """
+    n_cap = graph.n_cap
+    new_feat = features[reloc.perm]
+    remap = reloc.inv_perm
+    src = jnp.where(graph.edge_mask, remap[jnp.clip(graph.src, 0, n_cap - 1)], -1)
+    dst = jnp.where(graph.edge_mask, remap[jnp.clip(graph.dst, 0, n_cap - 1)], -1)
+    new_graph = Graph(src=src, dst=dst,
+                      node_mask=graph.node_mask[reloc.perm],
+                      edge_mask=graph.edge_mask)
+    return new_graph, new_feat
+
+
+def rcm_within_partitions(graph: Graph, assignment: jax.Array, k: int
+                          ) -> Relocation:
+    """Partition-contiguous relocation with reverse-Cuthill–McKee ordering
+    *inside* each partition block.
+
+    Plain partition-sort preserves arrival order within blocks, which
+    destroys any natural banding (EXPERIMENTS.md §Perf refuted-hypothesis);
+    a BFS/RCM pass per partition restores near-diagonal BSR structure, so
+    the Pallas SpMM streams fewer tiles. Host-side (it is a data-layout
+    pass, run at relocation events, not per step).
+    """
+    import collections
+
+    from repro.graph.structure import to_csr
+
+    lab = np.asarray(assignment)
+    node_mask = np.asarray(graph.node_mask)
+    indptr, indices = to_csr(graph)
+    n_cap = graph.n_cap
+    order: list = []
+    for p in range(k):
+        members = np.flatnonzero((lab == p) & node_mask)
+        if members.size == 0:
+            continue
+        member_set = set(members.tolist())
+        visited = set()
+        # start from the minimum-degree member (RCM heuristic)
+        degs = {int(v): int(indptr[v + 1] - indptr[v]) for v in members}
+        for seed in sorted(members, key=lambda v: degs[int(v)]):
+            seed = int(seed)
+            if seed in visited:
+                continue
+            queue = collections.deque([seed])
+            visited.add(seed)
+            comp = []
+            while queue:
+                v = queue.popleft()
+                comp.append(v)
+                nbrs = [int(w) for w in indices[indptr[v]:indptr[v + 1]]
+                        if int(w) in member_set and int(w) not in visited]
+                nbrs.sort(key=lambda w: degs[w])
+                visited.update(nbrs)
+                queue.extend(nbrs)
+            order.extend(reversed(comp))          # the "reverse" in RCM
+    # padding slots go last, keeping their assignment
+    pad = np.flatnonzero(~node_mask)
+    perm = np.concatenate([np.asarray(order, np.int64), pad]).astype(np.int64)
+    inv = np.zeros(n_cap, np.int32)
+    inv[perm] = np.arange(n_cap, dtype=np.int32)
+    block_of = lab[perm]
+    moved = int((inv != np.arange(n_cap))[node_mask].sum())
+    return Relocation(perm=jnp.asarray(perm), inv_perm=jnp.asarray(inv),
+                      block_of=jnp.asarray(block_of),
+                      moved=jnp.asarray(moved, jnp.int32),
+                      moved_bytes_per_unit=jnp.asarray(moved, jnp.int32))
+
+
+def device_blocks(n_cap: int, num_devices: int) -> np.ndarray:
+    """Contiguous slot ranges per device: device d owns [starts[d], starts[d+1])."""
+    per = -(-n_cap // num_devices)
+    starts = np.minimum(np.arange(num_devices + 1) * per, n_cap)
+    return starts
+
+
+def cross_device_edge_fraction(graph: Graph, assignment: jax.Array,
+                               k: int) -> jax.Array:
+    """Fraction of live edges crossing partition blocks == collective traffic
+    fraction of the distributed engine's neighbour gather."""
+    n_cap = graph.n_cap
+    a = assignment[jnp.clip(graph.src, 0, n_cap - 1)]
+    b = assignment[jnp.clip(graph.dst, 0, n_cap - 1)]
+    cut = jnp.sum((a != b) & graph.edge_mask)
+    return cut / jnp.maximum(jnp.sum(graph.edge_mask), 1)

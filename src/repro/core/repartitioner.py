@@ -1,0 +1,164 @@
+"""Run-to-convergence driver for the adaptive heuristic (paper §3, Fig. 2/6).
+
+The paper's convergence criterion: zero migrations for 30 consecutive
+iterations. The driver is a host loop around the jit'd ``migrate_step`` so we
+can record per-iteration history (cut ratio, migrations) exactly like the
+paper's figures; a pure ``lax.while_loop`` variant is provided for embedding
+the adaptation inside larger jit programs (the distributed engine uses it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph, cut_ratio
+from repro.core.partition_state import PartitionState, make_state, imbalance
+from repro.core.migration import migrate_step, flush_pending
+
+
+@dataclasses.dataclass
+class AdaptiveConfig:
+    k: int = 9                    # paper's microbenchmarks use 9 partitions
+    s: float = 0.5                # paper's recommended damping (§3.4)
+    slack: float = 0.1            # capacity head-room over perfect balance
+    patience: int = 30            # paper: converged after 30 quiet iterations
+    max_iters: int = 500
+    seed: int = 0
+    chunked_counts: bool = False  # memory-light scoring for very large graphs
+    tie_break: str = "random"     # "stay" = paper's literal rule; "random" = Spinner-style
+    rel_tol: float = 1e-3         # cut-ratio plateau tolerance (random tie-break mode)
+
+
+@dataclasses.dataclass
+class History:
+    cut_ratio: List[float]
+    migrations: List[int]
+    willing: List[int]
+    imbalance: List[float]
+
+    def as_dict(self) -> Dict[str, list]:
+        return dataclasses.asdict(self)
+
+    @property
+    def total_migrations(self) -> int:
+        return int(np.sum(self.migrations))
+
+    @property
+    def iterations(self) -> int:
+        return len(self.migrations)
+
+
+class AdaptivePartitioner:
+    """The xDGP repartitioner: owns config, exposes step / converge / adapt."""
+
+    def __init__(self, config: AdaptiveConfig):
+        self.config = config
+
+    def init_state(self, graph: Graph, assignment: jax.Array,
+                   capacity: Optional[jax.Array] = None) -> PartitionState:
+        return make_state(graph, assignment, self.config.k,
+                          slack=self.config.slack, seed=self.config.seed,
+                          capacity=capacity)
+
+    def step(self, state: PartitionState, graph: Graph) -> Tuple[PartitionState, dict]:
+        state, stats = migrate_step(state, graph, s=self.config.s,
+                                    use_chunked_counts=self.config.chunked_counts,
+                                    tie_break=self.config.tie_break)
+        return state, {k: int(v) for k, v in stats._asdict().items()}
+
+    def run_to_convergence(self, graph: Graph, state: PartitionState,
+                           record_history: bool = True,
+                           ) -> Tuple[PartitionState, History]:
+        """Iterate until converged.
+
+        Convergence: tie_break="stay" → zero migrations for ``patience``
+        consecutive iterations (the paper's criterion). tie_break="random" →
+        tied boundaries keep fluctuating forever, so we additionally stop when
+        the cut ratio has not improved by ``rel_tol`` over a ``patience``
+        iteration window.
+        """
+        cfg = self.config
+        hist = History([], [], [], [])
+        quiet = 0
+        best_cut = float("inf")
+        stale = 0
+        for _ in range(cfg.max_iters):
+            state, stats = migrate_step(state, graph, s=cfg.s,
+                                        use_chunked_counts=cfg.chunked_counts,
+                                        tie_break=cfg.tie_break)
+            moved = int(stats.committed)
+            pending = int(stats.admitted)
+            cut = float(cut_ratio(graph, state.assignment))
+            if record_history:
+                hist.cut_ratio.append(cut)
+                hist.migrations.append(moved)
+                hist.willing.append(int(stats.willing))
+                hist.imbalance.append(float(imbalance(state, graph.node_mask)))
+            quiet = quiet + 1 if (moved == 0 and pending == 0) else 0
+            if cut < best_cut * (1.0 - cfg.rel_tol):
+                best_cut = cut
+                stale = 0
+            else:
+                stale += 1
+            if quiet >= cfg.patience:
+                break
+            if cfg.tie_break == "random" and stale >= cfg.patience:
+                break
+        state = flush_pending(state, graph, s=cfg.s)
+        return state, hist
+
+    def adapt(self, graph: Graph, state: PartitionState, iters: int,
+              ) -> Tuple[PartitionState, History]:
+        """Run a fixed number of adaptation iterations (continuous mode)."""
+        hist = History([], [], [], [])
+        for _ in range(iters):
+            state, stats = migrate_step(state, graph, s=self.config.s,
+                                        use_chunked_counts=self.config.chunked_counts,
+                                        tie_break=self.config.tie_break)
+            hist.cut_ratio.append(float(cut_ratio(graph, state.assignment)))
+            hist.migrations.append(int(stats.committed))
+            hist.willing.append(int(stats.willing))
+            hist.imbalance.append(float(imbalance(state, graph.node_mask)))
+        return state, hist
+
+
+def converge_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
+                 patience: int = 30, max_iters: int = 500,
+                 tie_break: str = "stay") -> PartitionState:
+    """Pure lax.while_loop convergence (no history) — embeddable inside jit.
+
+    Used by the distributed engine and the dry-run lowering of the
+    partitioner program. Uses the paper's zero-migration criterion, so the
+    default tie_break here is the paper's "stay" rule.
+    """
+
+    def cond(carry):
+        st, quiet, it = carry
+        return (quiet < patience) & (it < max_iters)
+
+    def body(carry):
+        st, quiet, it = carry
+        st, stats = migrate_step(st, graph, s=s, tie_break=tie_break)
+        moved = stats.committed + stats.admitted
+        quiet = jnp.where(moved == 0, quiet + 1, 0)
+        return st, quiet, it + 1
+
+    state, _, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+    return flush_pending(state, graph, s=s)
+
+
+def adapt_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
+              iters: int = 30, tie_break: str = "random") -> PartitionState:
+    """Fixed-iteration adaptation as a single jit program (lax.scan)."""
+
+    def body(st, _):
+        st, stats = migrate_step(st, graph, s=s, tie_break=tie_break)
+        return st, stats.committed
+
+    state, _ = jax.lax.scan(body, state, None, length=iters)
+    return flush_pending(state, graph, s=s)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (NodeLabelTask, RecsysStream, TokenStream,
+                                 node_features)
+
+__all__ = ["NodeLabelTask", "RecsysStream", "TokenStream", "node_features"]

@@ -1,0 +1,6 @@
+from repro.graph.structure import (Graph, GraphDelta, apply_delta, cut_edges,
+                                   cut_ratio, from_edges, to_csr)
+from repro.graph import generators
+
+__all__ = ["Graph", "GraphDelta", "apply_delta", "cut_edges", "cut_ratio",
+           "from_edges", "to_csr", "generators"]

@@ -1,0 +1,108 @@
+"""COO → BSR (block-sparse row) packing for the TPU SpMM kernel.
+
+TPU-native sparse adjacency: 128×128 tiles, nonzero tiles packed dense and
+streamed through the MXU (see kernels/bsr_spmm.py). After xDGP
+repartitioning + relocation, nonzero tiles concentrate near the diagonal —
+fewer tiles ⇒ proportionally less compute/DMA, which is how partition
+quality becomes kernel speedup on TPU (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structure import Graph
+
+
+class BSRMatrix(NamedTuple):
+    """Padded BSR. n_rows = n_cols = n_blocks * blk.
+
+    blocks:     (nnzb_cap, blk, blk) packed nonzero tiles (float32/bf16)
+    block_cols: (nnzb_cap,) tile-column index per packed tile (-1 padding)
+    row_ptr:    (n_blocks + 1,) tile-row offsets into the packed arrays
+    nnzb:       () live tile count
+    """
+
+    blocks: jax.Array
+    block_cols: jax.Array
+    row_ptr: jax.Array
+    nnzb: jax.Array
+
+    @property
+    def blk(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+
+def graph_to_bsr(graph: Graph, blk: int = 128, normalize: Optional[str] = None,
+                 nnzb_cap: Optional[int] = None, dtype=np.float32) -> BSRMatrix:
+    """Pack the symmetrised adjacency into BSR tiles.
+
+    normalize: None -> A; "sym" -> D^-1/2 A D^-1/2; "row" -> D^-1 A.
+    """
+    n_cap = graph.n_cap
+    n_pad = -(-n_cap // blk) * blk
+    em = np.asarray(graph.edge_mask)
+    s = np.asarray(graph.src)[em].astype(np.int64)
+    d = np.asarray(graph.dst)[em].astype(np.int64)
+    rows = np.concatenate([s, d])
+    cols = np.concatenate([d, s])
+    vals = np.ones(rows.shape[0], dtype=np.float64)
+    if normalize is not None:
+        deg = np.bincount(rows, minlength=n_pad).astype(np.float64)
+        deg = np.maximum(deg, 1.0)
+        if normalize == "sym":
+            vals = vals / np.sqrt(deg[rows] * deg[cols])
+        elif normalize == "row":
+            vals = vals / deg[rows]
+        else:
+            raise ValueError(normalize)
+    br, bc = rows // blk, cols // blk
+    key = br * (n_pad // blk) + bc
+    order = np.argsort(key, kind="stable")
+    rows, cols, vals, br, bc, key = (a[order] for a in (rows, cols, vals, br, bc, key))
+    uniq, start = np.unique(key, return_index=True)
+    nnzb = uniq.shape[0]
+    cap = int(nnzb_cap if nnzb_cap is not None else max(nnzb, 1))
+    if cap < nnzb:
+        raise ValueError(f"nnzb_cap {cap} < required {nnzb}")
+    blocks = np.zeros((cap, blk, blk), dtype=dtype)
+    block_cols = np.full((cap,), -1, dtype=np.int32)
+    n_blocks = n_pad // blk
+    row_counts = np.zeros(n_blocks, dtype=np.int64)
+    tile_row = (uniq // n_blocks).astype(np.int64)
+    tile_col = (uniq % n_blocks).astype(np.int64)
+    block_cols[:nnzb] = tile_col
+    np.add.at(row_counts, tile_row, 1)
+    row_ptr = np.zeros(n_blocks + 1, dtype=np.int32)
+    np.cumsum(row_counts, out=row_ptr[1:])
+    # scatter entries into their tiles
+    bounds = np.append(start, rows.shape[0])
+    for t in range(nnzb):
+        lo, hi = bounds[t], bounds[t + 1]
+        r = (rows[lo:hi] % blk).astype(np.int64)
+        c = (cols[lo:hi] % blk).astype(np.int64)
+        np.add.at(blocks[t], (r, c), vals[lo:hi])
+    return BSRMatrix(blocks=jnp.asarray(blocks), block_cols=jnp.asarray(block_cols),
+                     row_ptr=jnp.asarray(row_ptr), nnzb=jnp.asarray(nnzb, jnp.int32))
+
+
+def bsr_density_stats(bsr: BSRMatrix) -> dict:
+    """Diagnostics: how concentrated are the tiles (post-partitioning metric)."""
+    nb = int(bsr.nnzb)
+    cols = np.asarray(bsr.block_cols[:nb])
+    rp = np.asarray(bsr.row_ptr)
+    rows = np.repeat(np.arange(bsr.n_blocks), np.diff(rp))
+    if nb == 0:
+        return {"nnzb": 0, "diag_frac": 1.0, "mean_band": 0.0}
+    diag = float(np.mean(rows == cols[: rows.shape[0]]))
+    band = float(np.mean(np.abs(rows - cols[: rows.shape[0]])))
+    return {"nnzb": nb, "diag_frac": diag, "mean_band": band,
+            "tiles_per_row": nb / max(bsr.n_blocks, 1)}

@@ -1,0 +1,190 @@
+"""Synthetic graph generators matching the paper's evaluation datasets (§5.1).
+
+* ``fem_cube``      — 3-D regular cubic mesh ("heart cell" FEM, Ten Tusscher model graphs)
+* ``power_law``     — Holme–Kim-style powerlaw-cluster graph (paper: networkX
+                      ``powerlaw_cluster_graph`` with D = log|V|, p = 0.1)
+* ``forest_fire``   — Leskovec forest-fire growth model, used by the paper to
+                      inject dynamic changes ("burst of new vertices ... 1,2,5,10%")
+
+All generators are host-side numpy (deterministic via seed) and return padded
+``Graph`` objects ready for the jit'd adaptive loop.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.structure import Graph, GraphDelta, from_edges, to_csr
+
+
+def fem_cube(side: int, n_cap: Optional[int] = None, e_cap: Optional[int] = None) -> Graph:
+    """Regular 3-D cubic lattice with 6-neighbourhood; |V| = side**3."""
+    n = side ** 3
+    ids = np.arange(n, dtype=np.int64)
+    x = ids % side
+    y = (ids // side) % side
+    z = ids // (side * side)
+    srcs: List[np.ndarray] = []
+    dsts: List[np.ndarray] = []
+    # +x, +y, +z neighbours (each undirected edge emitted once)
+    m = x + 1 < side
+    srcs.append(ids[m]); dsts.append(ids[m] + 1)
+    m = y + 1 < side
+    srcs.append(ids[m]); dsts.append(ids[m] + side)
+    m = z + 1 < side
+    srcs.append(ids[m]); dsts.append(ids[m] + side * side)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    return from_edges(src, dst, n, n_cap=n_cap, e_cap=e_cap)
+
+
+def fem_grid2d(side: int, n_cap: Optional[int] = None, e_cap: Optional[int] = None) -> Graph:
+    """2-D lattice (stand-in for 3elt/4elt style FEM meshes)."""
+    n = side * side
+    ids = np.arange(n, dtype=np.int64)
+    x = ids % side
+    y = ids // side
+    srcs, dsts = [], []
+    m = x + 1 < side
+    srcs.append(ids[m]); dsts.append(ids[m] + 1)
+    m = y + 1 < side
+    srcs.append(ids[m]); dsts.append(ids[m] + side)
+    return from_edges(np.concatenate(srcs), np.concatenate(dsts), n, n_cap=n_cap, e_cap=e_cap)
+
+
+def power_law(n: int, seed: int = 0, m: Optional[int] = None, p: float = 0.1,
+              n_cap: Optional[int] = None, e_cap: Optional[int] = None) -> Graph:
+    """Holme–Kim powerlaw-cluster graph (paper: D = log|V|, rewiring p = 0.1).
+
+    Each new node attaches ``m`` edges by preferential attachment; with
+    probability ``p`` the next edge is a triad-closing edge instead.
+    """
+    if m is None:
+        m = max(1, int(round(np.log(max(n, 3)))) // 2)  # avg degree ≈ log|V|
+    rng = np.random.default_rng(seed)
+    # repeated-nodes list for preferential attachment
+    targets = list(range(m))
+    repeated: List[int] = []
+    src_l: List[int] = []
+    dst_l: List[int] = []
+    for v in range(m, n):
+        chosen = set()
+        t = int(targets[rng.integers(len(targets))]) if targets else 0
+        for _ in range(m):
+            # triad closure with prob p: link to a neighbour of t
+            if repeated and rng.random() < p and len(chosen) > 0:
+                nbrs = [d for s, d in zip(src_l[-3 * m:], dst_l[-3 * m:]) if s == t]
+                cand = int(nbrs[rng.integers(len(nbrs))]) if nbrs else int(repeated[rng.integers(len(repeated))])
+            else:
+                cand = int(repeated[rng.integers(len(repeated))]) if repeated else int(rng.integers(max(v, 1)))
+            tries = 0
+            while (cand in chosen or cand == v) and tries < 8:
+                cand = int(rng.integers(v))
+                tries += 1
+            if cand != v and cand not in chosen:
+                chosen.add(cand)
+                src_l.append(v)
+                dst_l.append(cand)
+        repeated.extend(chosen)
+        repeated.append(v)
+        targets = repeated
+    src = np.asarray(src_l, dtype=np.int64)
+    dst = np.asarray(dst_l, dtype=np.int64)
+    return from_edges(src, dst, n, n_cap=n_cap, e_cap=e_cap)
+
+
+def chung_lu(n: int, avg_degree: float, seed: int = 0, gamma: float = 2.2,
+             n_cap: Optional[int] = None, e_cap: Optional[int] = None) -> Graph:
+    """Fast vectorised power-law graph (Chung–Lu model): edge (u,v) drawn
+    with probability ∝ w_u·w_v, weights Pareto(γ). Millions of edges in
+    seconds — used for partition-quality measurements at ogb_products scale.
+    """
+    rng = np.random.default_rng(seed)
+    w = rng.pareto(gamma - 1.0, size=n) + 1.0
+    p = w / w.sum()
+    m = int(n * avg_degree / 2 * 1.15)           # oversample for dedup losses
+    src = rng.choice(n, size=m, p=p)
+    dst = rng.choice(n, size=m, p=p)
+    return from_edges(src, dst, n, n_cap=n_cap, e_cap=e_cap)
+
+
+def forest_fire_delta(graph: Graph, growth_frac: float, seed: int = 0,
+                      fwd_prob: float = 0.35, a_cap: Optional[int] = None) -> GraphDelta:
+    """Forest-fire growth (Leskovec et al.) sized to ``growth_frac`` of |V|.
+
+    New vertices pick an ambassador, "burn" a geometric number of its
+    neighbours, and link to burned vertices — producing the bursty,
+    preferential-attachment-like growth the paper injects (Fig. 7, §5.3).
+    Returns a GraphDelta; apply with ``structure.apply_delta``.
+    """
+    rng = np.random.default_rng(seed)
+    n_now = int(np.asarray(graph.num_nodes))
+    n_new = max(1, int(round(n_now * growth_frac)))
+    indptr, indices = to_csr(graph)
+    alive = np.flatnonzero(np.asarray(graph.node_mask))
+    add_src: List[int] = []
+    add_dst: List[int] = []
+    next_id = int(alive.max()) + 1 if alive.size else 0
+    for i in range(n_new):
+        v = next_id + i
+        if v >= graph.n_cap:
+            break
+        amb = int(alive[rng.integers(alive.size)])
+        add_src.append(v); add_dst.append(amb)
+        # burn outward
+        frontier = [amb]
+        burned = {amb}
+        depth = 0
+        while frontier and depth < 3:
+            nxt: List[int] = []
+            for u in frontier:
+                nbrs = indices[indptr[u]:indptr[u + 1]]
+                if nbrs.size == 0:
+                    continue
+                k = rng.geometric(1.0 - fwd_prob) - 1
+                k = int(min(k, nbrs.size))
+                if k <= 0:
+                    continue
+                picks = rng.choice(nbrs, size=k, replace=False)
+                for w in picks:
+                    w = int(w)
+                    if w not in burned:
+                        burned.add(w)
+                        add_src.append(v); add_dst.append(w)
+                        nxt.append(w)
+            frontier = nxt
+            depth += 1
+    import jax.numpy as jnp
+    a = len(add_src)
+    cap = int(a_cap if a_cap is not None else a)
+    cap = max(cap, a)
+    s = np.full((cap,), -1, dtype=np.int32); s[:a] = add_src
+    d = np.full((cap,), -1, dtype=np.int32); d[:a] = add_dst
+    m = np.zeros((cap,), dtype=bool); m[:a] = True
+    return GraphDelta(add_src=jnp.asarray(s), add_dst=jnp.asarray(d),
+                      add_mask=jnp.asarray(m),
+                      del_nodes=jnp.full((1,), -1, jnp.int32),
+                      del_mask=jnp.zeros((1,), bool))
+
+
+def sliding_window_stream(n_users: int, n_events: int, window: int, seed: int = 0
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """CDR-style call stream: (time, caller, callee) with power-law activity.
+
+    Models the paper's mobile-operator use case (§5.3): a sliding window over
+    the stream adds edges for new calls and expires inactive ones.
+    """
+    rng = np.random.default_rng(seed)
+    # zipf-ish caller activity
+    pop = rng.zipf(1.8, size=n_users).astype(np.float64)
+    pop = pop / pop.sum()
+    callers = rng.choice(n_users, size=n_events, p=pop)
+    # callee: mixture of social circle (nearby id) and random
+    circle = (callers + rng.integers(1, 50, size=n_events)) % n_users
+    rnd = rng.integers(0, n_users, size=n_events)
+    take_circle = rng.random(n_events) < 0.8
+    callees = np.where(take_circle, circle, rnd)
+    times = np.sort(rng.integers(0, window * 8, size=n_events))
+    keep = callers != callees
+    return times[keep], callers[keep].astype(np.int64), callees[keep].astype(np.int64)

@@ -1,0 +1,203 @@
+"""Graph data structures.
+
+Static-shape (padded + masked) COO graph representation so the whole adaptive
+partitioning loop and the GNN runtime stay jit-compatible while the topology
+evolves (paper §4.1: change queue applied between supersteps).
+
+Conventions
+-----------
+* ``src``/``dst`` are int32 arrays of length ``e_cap``; invalid (padding) slots
+  hold ``-1`` in both endpoints and are excluded by ``edge_mask``.
+* ``node_mask`` marks live vertices out of ``n_cap`` slots.
+* Graphs are **undirected** for partitioning purposes (the paper's cut metric);
+  we store each undirected edge once and symmetrise on demand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Padded COO graph. All fields are device arrays; shapes are static."""
+
+    src: jax.Array            # (e_cap,) int32, -1 = padding
+    dst: jax.Array            # (e_cap,) int32
+    node_mask: jax.Array      # (n_cap,) bool
+    edge_mask: jax.Array      # (e_cap,) bool
+
+    @property
+    def n_cap(self) -> int:
+        return self.node_mask.shape[0]
+
+    @property
+    def e_cap(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def num_nodes(self) -> jax.Array:
+        return jnp.sum(self.node_mask.astype(jnp.int32))
+
+    @property
+    def num_edges(self) -> jax.Array:
+        return jnp.sum(self.edge_mask.astype(jnp.int32))
+
+    def degrees(self) -> jax.Array:
+        """Undirected degree per node slot (padding slots get 0)."""
+        ones = self.edge_mask.astype(jnp.int32)
+        d = jax.ops.segment_sum(ones, jnp.where(self.edge_mask, self.src, self.n_cap),
+                                num_segments=self.n_cap + 1)[: self.n_cap]
+        d = d + jax.ops.segment_sum(ones, jnp.where(self.edge_mask, self.dst, self.n_cap),
+                                    num_segments=self.n_cap + 1)[: self.n_cap]
+        return d
+
+    def symmetrized(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Both edge directions: returns (src2, dst2, mask2) of length 2*e_cap."""
+        s = jnp.concatenate([self.src, self.dst])
+        d = jnp.concatenate([self.dst, self.src])
+        m = jnp.concatenate([self.edge_mask, self.edge_mask])
+        return s, d, m
+
+
+def from_edges(src: np.ndarray, dst: np.ndarray, num_nodes: int,
+               n_cap: Optional[int] = None, e_cap: Optional[int] = None) -> Graph:
+    """Build a padded Graph from host edge arrays (deduplicated, no self loops)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    uniq = np.unique(lo * np.int64(num_nodes) + hi)
+    lo = (uniq // num_nodes).astype(np.int32)
+    hi = (uniq % num_nodes).astype(np.int32)
+    e = lo.shape[0]
+    n_cap = int(n_cap if n_cap is not None else num_nodes)
+    e_cap = int(e_cap if e_cap is not None else e)
+    if n_cap < num_nodes or e_cap < e:
+        raise ValueError(f"capacity too small: n_cap={n_cap}<{num_nodes} or e_cap={e_cap}<{e}")
+    s = np.full((e_cap,), -1, dtype=np.int32)
+    d = np.full((e_cap,), -1, dtype=np.int32)
+    s[:e], d[:e] = lo, hi
+    nm = np.zeros((n_cap,), dtype=bool)
+    nm[:num_nodes] = True
+    em = np.zeros((e_cap,), dtype=bool)
+    em[:e] = True
+    return Graph(src=jnp.asarray(s), dst=jnp.asarray(d),
+                 node_mask=jnp.asarray(nm), edge_mask=jnp.asarray(em))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """A batch of topology changes (paper's change queue), padded/masked.
+
+    Additions come as edge endpoint pairs; endpoints outside the current
+    node set implicitly add vertices. Removals are edge-slot indices and
+    node ids (removing a node drops all incident edges).
+    """
+
+    add_src: jax.Array        # (a_cap,) int32, -1 padding
+    add_dst: jax.Array        # (a_cap,) int32
+    add_mask: jax.Array       # (a_cap,) bool
+    del_nodes: jax.Array      # (d_cap,) int32, -1 padding
+    del_mask: jax.Array       # (d_cap,) bool
+
+    @staticmethod
+    def empty(a_cap: int = 0, d_cap: int = 0) -> "GraphDelta":
+        return GraphDelta(
+            add_src=jnp.full((a_cap,), -1, jnp.int32),
+            add_dst=jnp.full((a_cap,), -1, jnp.int32),
+            add_mask=jnp.zeros((a_cap,), bool),
+            del_nodes=jnp.full((d_cap,), -1, jnp.int32),
+            del_mask=jnp.zeros((d_cap,), bool),
+        )
+
+
+@jax.jit
+def apply_delta(graph: Graph, delta: GraphDelta) -> Graph:
+    """Apply a GraphDelta in-place (masked scatter); static shapes throughout.
+
+    Edge additions fill the first free padding slots (prefix-sum allocation).
+    Node deletions clear node_mask and mask out incident edges.
+    """
+    n_cap, e_cap = graph.n_cap, graph.e_cap
+
+    # --- node deletions -------------------------------------------------
+    del_onehot = jnp.zeros((n_cap,), bool)
+    del_ids = jnp.where(delta.del_mask, delta.del_nodes, 0)
+    del_onehot = del_onehot.at[del_ids].set(delta.del_mask, mode="drop")
+    node_mask = graph.node_mask & ~del_onehot
+
+    # incident edges die with their nodes
+    e_alive = graph.edge_mask
+    e_alive = e_alive & ~del_onehot[jnp.clip(graph.src, 0, n_cap - 1)]
+    e_alive = e_alive & ~del_onehot[jnp.clip(graph.dst, 0, n_cap - 1)]
+
+    # --- node additions (implicit via edge endpoints) --------------------
+    add_ids = jnp.concatenate([
+        jnp.where(delta.add_mask, delta.add_src, 0),
+        jnp.where(delta.add_mask, delta.add_dst, 0),
+    ])
+    add_flags = jnp.concatenate([delta.add_mask, delta.add_mask])
+    node_mask = node_mask.at[add_ids].max(add_flags, mode="drop")
+
+    # --- edge additions into free slots ----------------------------------
+    a_cap = delta.add_mask.shape[0]
+    free = ~e_alive                                      # (e_cap,) free slots
+    # the r-th valid addition goes into the r-th free slot
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1   # rank of slot s
+    add_rank = jnp.cumsum(delta.add_mask.astype(jnp.int32)) - 1
+    n_valid = jnp.sum(delta.add_mask.astype(jnp.int32))
+    # rank r -> index of the r-th valid addition in the delta arrays
+    add_idx_of_rank = jnp.full((a_cap,), -1, jnp.int32)
+    add_idx_of_rank = add_idx_of_rank.at[
+        jnp.where(delta.add_mask, add_rank, a_cap)].set(
+        jnp.arange(a_cap, dtype=jnp.int32), mode="drop")
+    hosts = free & (free_rank < n_valid)                 # slot receives an add
+    cand = add_idx_of_rank[jnp.clip(free_rank, 0, a_cap - 1)]
+    has_new = hosts & (cand >= 0)
+    csafe = jnp.clip(cand, 0, a_cap - 1)
+    new_src = jnp.where(has_new, delta.add_src[csafe],
+                        jnp.where(e_alive, graph.src, -1))
+    new_dst = jnp.where(has_new, delta.add_dst[csafe],
+                        jnp.where(e_alive, graph.dst, -1))
+    edge_mask = e_alive | has_new
+    return Graph(src=new_src, dst=new_dst, node_mask=node_mask, edge_mask=edge_mask)
+
+
+def to_csr(graph: Graph) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR over the *symmetrised* live edges (for sampling etc.)."""
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    em = np.asarray(graph.edge_mask)
+    s, d = src[em], dst[em]
+    s2 = np.concatenate([s, d])
+    d2 = np.concatenate([d, s])
+    order = np.argsort(s2, kind="stable")
+    s2, d2 = s2[order], d2[order]
+    n = graph.n_cap
+    counts = np.bincount(s2, minlength=n)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, d2.astype(np.int32)
+
+
+def cut_edges(graph: Graph, assignment: jax.Array) -> jax.Array:
+    """Number of live edges whose endpoints sit in different partitions."""
+    a = assignment[jnp.clip(graph.src, 0, graph.n_cap - 1)]
+    b = assignment[jnp.clip(graph.dst, 0, graph.n_cap - 1)]
+    return jnp.sum((a != b) & graph.edge_mask)
+
+
+def cut_ratio(graph: Graph, assignment: jax.Array) -> jax.Array:
+    """Paper's quality metric: |E_c| / |E| over live edges."""
+    e = jnp.maximum(graph.num_edges, 1)
+    return cut_edges(graph, assignment) / e

@@ -1,0 +1,60 @@
+"""EmbeddingBag Pallas kernel: scalar-prefetched row gather + bag reduce.
+
+The recsys hot path (multi-hot categorical → pooled embedding). Each grid
+step (b, j) DMAs exactly one table row into VMEM — the row index comes from
+the prefetched indices array via the BlockSpec index map, so padding (-1)
+rows are clamped and masked with @pl.when. Sum combine in-kernel; mean
+divides outside (ops.py) where the valid count is cheap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:                                        # pragma: no cover
+    pltpu = None
+
+
+def _kernel(idx_ref, table_ref, o_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(idx_ref[b, j] >= 0)
+    def _accum():
+        o_ref[0] += table_ref[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_sum(table: jax.Array, indices: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """table (V,D) f32/bf16, indices (B,n_hot) int32 (−1 pad) → (B,D) sum."""
+    v, d = table.shape
+    b, h = indices.shape
+
+    def t_index(bi, j, idx_s):
+        return (jnp.clip(idx_s[bi, j], 0, v - 1), 0)
+
+    def o_index(bi, j, idx_s):
+        return (bi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h),
+        in_specs=[pl.BlockSpec((1, d), t_index)],
+        out_specs=pl.BlockSpec((1, d), o_index),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(indices, table).astype(table.dtype)

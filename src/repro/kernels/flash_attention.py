@@ -1,0 +1,116 @@
+"""Blocked flash attention for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+Supports causal masking, sliding window (gemma-2 local layers), logit
+soft-capping and GQA (kv-head folding via the index map — no KV repeat in
+HBM). Online-softmax accumulation in f32 VMEM scratch; MXU-aligned block
+shapes (q-block × head_dim and q-block × k-block matmuls).
+
+Target: TPU v5e. Validated on CPU with interpret=True against
+ref.ref_flash_attention (tests/test_kernels_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch, acc_scratch,
+               *, scale: float, causal: bool, window: int,
+               softcap: Optional[float], bq: int, bk: int, n_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]                             # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scratch[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scratch[...], 1e-20)
+        o_ref[0, 0] = (acc_scratch[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,H,Sq,D); k/v: (B,KV,Sk,D) with H % KV == 0. Returns (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    rep = h // kv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    n_q, n_k = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_fa_kernel, scale=scale, causal=causal,
+                               window=window, softcap=softcap, bq=bq, bk=bk,
+                               n_k=n_k)
+    grid = (b, h, n_q, n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:                                    # pragma: no cover
+        return pl.MemorySpace.ANY(shape, dtype)

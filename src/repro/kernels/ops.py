@@ -1,0 +1,63 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with interpret=True — bit-faithful
+to the kernel body; on TPU they compile natively. The wrappers keep the
+pure-jnp contracts of ref.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.bsr import BSRMatrix
+from repro.kernels import ref
+from repro.kernels.bsr_spmm import bsr_spmm, max_tiles_per_row
+from repro.kernels.embedding_bag import embedding_bag_sum
+from repro.kernels.flash_attention import flash_attention as _fa
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: int = 0, softcap: Optional[float] = None,
+              bq: int = 128, bk: int = 128) -> jax.Array:
+    """Flash attention (B,H,Sq,D)×(B,KV,Sk,D) → (B,H,Sq,D)."""
+    return _fa(q, k, v, causal=causal, window=window, softcap=softcap,
+               bq=bq, bk=bk, interpret=_interpret())
+
+
+def bsr_matmul(bsr: BSRMatrix, x: jax.Array,
+               max_per_row: Optional[int] = None) -> jax.Array:
+    """A_bsr @ X for a packed BSRMatrix (graph adjacency)."""
+    if max_per_row is None:
+        max_per_row = max_tiles_per_row(np.asarray(bsr.row_ptr))
+    return bsr_spmm(bsr.blocks, bsr.block_cols, bsr.row_ptr, x,
+                    max_per_row=max_per_row, interpret=_interpret())
+
+
+def partition_counts(bsr: BSRMatrix, assignment: jax.Array, k: int,
+                     max_per_row: Optional[int] = None) -> jax.Array:
+    """xDGP migration scorer on TPU: counts = A @ one_hot(labels).
+
+    Returns (n_cap_padded, k) neighbour counts — the kernel-served version
+    of core.migration.neighbour_partition_counts.
+    """
+    n = bsr.n_blocks * bsr.blk
+    lab = jnp.clip(assignment, 0, k - 1)[:n]
+    onehot = jax.nn.one_hot(lab, k, dtype=bsr.blocks.dtype)
+    return bsr_matmul(bsr, onehot, max_per_row)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  combine: str = "mean") -> jax.Array:
+    """Pallas EmbeddingBag matching models.recsys.embedding_bag."""
+    out = embedding_bag_sum(table, indices, interpret=_interpret())
+    if combine == "mean":
+        valid = (indices >= 0).sum(axis=1, keepdims=True)
+        out = out / jnp.maximum(valid, 1).astype(out.dtype)
+    return out

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """q: (B,H,Sq,D), k/v: (B,KV,Sk,D), GQA by head folding. window 0 = full."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    rep = h // kv
+    qg = q.reshape(b, kv, rep, sq, d)
+    scores = jnp.einsum("bkrqd,bksd->bkrqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    sk = k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bksd->bkrqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def ref_bsr_spmm(blocks: jax.Array, block_cols: jax.Array, row_ptr: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """BSR (nnzb, blk, blk) × dense X (n_blocks*blk, d) → (n_blocks*blk, d).
+
+    Padding tiles have block_cols == -1 and are skipped.
+    """
+    nnzb, blk, _ = blocks.shape
+    n_blocks = row_ptr.shape[0] - 1
+    d = x.shape[1]
+    xb = x.reshape(n_blocks, blk, d)
+    # per-tile row id
+    rows = jnp.searchsorted(row_ptr, jnp.arange(nnzb), side="right") - 1
+    valid = block_cols >= 0
+    cols_safe = jnp.clip(block_cols, 0, n_blocks - 1)
+    prods = jnp.einsum("nij,njd->nid", blocks.astype(jnp.float32),
+                       xb[cols_safe].astype(jnp.float32))
+    prods = jnp.where(valid[:, None, None], prods, 0.0)
+    out = jax.ops.segment_sum(prods, jnp.clip(rows, 0, n_blocks - 1),
+                              num_segments=n_blocks)
+    return out.reshape(n_blocks * blk, d).astype(x.dtype)
+
+
+def ref_embedding_bag(table: jax.Array, indices: jax.Array,
+                      combine: str = "sum") -> jax.Array:
+    """(V,D) table, (B,n_hot) indices (−1 pad) → (B,D)."""
+    b, h = indices.shape
+    valid = indices >= 0
+    safe = jnp.clip(indices, 0, table.shape[0] - 1)
+    rows = jnp.take(table, safe.reshape(-1), axis=0).reshape(b, h, -1)
+    rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
+    out = rows.sum(axis=1)
+    if combine == "mean":
+        out = out / jnp.maximum(valid.sum(1, keepdims=True), 1)
+    return out.astype(table.dtype)

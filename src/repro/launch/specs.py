@@ -1,0 +1,456 @@
+"""Per-cell lowering specs: (fn, abstract args, in/out shardings).
+
+``build_cell(arch_id, shape_name, mesh)`` returns a ``LoweringSpec`` the
+dry-run compiles. Inputs are ``jax.ShapeDtypeStruct`` stand-ins (weak-type
+correct, no allocation); params come from ``jax.eval_shape`` over the real
+initialisers, so the lowered program is byte-identical to what the real
+launcher would compile on a pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import Cell
+from repro.models import (TransformerConfig, decode_step, init_cache,
+                          init_params, lm_loss, prefill)
+from repro.models import transformer as tfm
+from repro.models.dimenet import DimeNetConfig, TripletBatch, dimenet_init, dimenet_forward
+from repro.models.gnn import (GatedGCNConfig, GINConfig, GraphBatch,
+                              PNAConfig, gatedgcn_forward, gatedgcn_init,
+                              gin_forward, gin_init, node_classification_loss,
+                              graph_regression_loss, pna_forward, pna_init)
+from repro.models import recsys as rs
+from repro.optim import AdamWConfig
+from repro.runtime import sharding as shr
+from repro.train import TrainConfig, make_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+# per-shape DimeNet triplet budget (per directed edge); see configs/dimenet_cfg
+TRIPLET_BUDGET = {"full_graph_sm": 20, "minibatch_lg": 10, "ogb_products": 4,
+                  "molecule": 20}
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    static_info: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _sds(tree, shardings=None):
+    """Attach shardings (NamedSharding pytree) to a ShapeDtypeStruct pytree."""
+    return tree
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _maybe(axes, dim: int, mesh: Mesh):
+    """Return axes if they divide dim, else None (replicate)."""
+    size = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple) else (axes,))]))
+    return axes if dim % size == 0 else None
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_state_shardings(abstract_state, mesh, quantized: bool):
+    p_sh = shr.lm_param_shardings(abstract_state.params, mesh)
+
+    def moment_sharding_tree(abstract_m):
+        if not quantized:
+            return p_sh
+        from repro.optim.optimizer import QTensor
+
+        def leaf_spec(qt, param_sh):
+            if not isinstance(qt, QTensor):      # fp32 moment (vector/scalar)
+                return param_sh
+            # q is layout-preserving (same shape as the param): inherit the
+            # param's spec verbatim. Row-wise scale/zero drop the last axis.
+            pspec = list(param_sh.spec) + [None] * (qt.q.ndim - len(param_sh.spec))
+            pspec = pspec[: qt.q.ndim]
+            q_sh = NamedSharding(mesh, P(*pspec))
+            s_sh = NamedSharding(mesh, P(*pspec[: qt.scale.ndim]))
+            return QTensor(q=q_sh, scale=s_sh, zero=s_sh,
+                           shape=qt.shape, mode=qt.mode)
+
+        return jax.tree.map(leaf_spec, abstract_m, p_sh,
+                            is_leaf=lambda x: isinstance(x, QTensor))
+
+    from repro.train.train_step import TrainState
+    from repro.optim.optimizer import AdamWState
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(step=NamedSharding(mesh, P()),
+                       m=moment_sharding_tree(abstract_state.opt.m),
+                       v=moment_sharding_tree(abstract_state.opt.v)))
+
+
+def lm_cell(arch_id: str, shape_name: str, shape: Dict, mesh: Mesh) -> LoweringSpec:
+    mod = registry.get(arch_id)
+    cfg: TransformerConfig = mod.config()
+    dp = shr.data_axes(mesh)
+    B, S = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+
+    if kind == "train":
+        quant = cfg.moe is not None and cfg.moe.n_experts >= 64
+        tcfg = TrainConfig(optimizer=AdamWConfig(quantize_moments=quant),
+                           warmup_steps=100, total_steps=10_000)
+        abstract_state = jax.eval_shape(
+            lambda k: make_train_state(init_params(k, cfg), tcfg), KEY)
+        state_sh = _lm_state_shardings(abstract_state, mesh, quant)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        batch_sh = {"tokens": _ns(mesh, dp, None), "labels": _ns(mesh, dp, None)}
+        step = make_train_step(lambda p, b: lm_loss(p, b, cfg), tcfg)
+        metrics_sh = {"loss": _ns(mesh), "grad_norm": _ns(mesh), "lr_scale": _ns(mesh)}
+        return LoweringSpec(
+            name=f"{arch_id}:{shape_name}", fn=step,
+            args=(abstract_state, batch),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,),
+            static_info=dict(kind="train", tokens=B * S,
+                             quantized_moments=quant))
+
+    abstract_params = jax.eval_shape(lambda k: init_params(k, cfg), KEY)
+    p_sh = shr.lm_param_shardings(abstract_params, mesh)
+
+    if kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        fn = lambda p, t: prefill(p, t, cfg)
+        return LoweringSpec(
+            name=f"{arch_id}:{shape_name}", fn=fn,
+            args=(abstract_params, tokens),
+            in_shardings=(p_sh, _ns(mesh, dp, None)),
+            out_shardings=_ns(mesh, dp, _maybe(("model",), cfg.vocab, mesh)),
+            static_info=dict(kind="prefill", tokens=B * S))
+
+    # decode: one token step against an S-long cache
+    abstract_cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    b_ax = _maybe(dp, B, mesh)
+    if b_ax is None:
+        # batch=1 long-context: shard the sequence over every axis instead
+        s_ax = _maybe(tuple(mesh.axis_names), S, mesh) or _maybe(("model",), S, mesh)
+    else:
+        s_ax = _maybe(("model",), S, mesh)
+    if cfg.mla is not None:
+        cache_sh = (_ns(mesh, None, b_ax, s_ax, None),
+                    _ns(mesh, None, b_ax, s_ax, None))
+    else:
+        cache_sh = (_ns(mesh, None, b_ax, s_ax, None, None),
+                    _ns(mesh, None, b_ax, s_ax, None, None))
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, t, c, i: decode_step(p, t, c, i, cfg)
+    logits_sh = _ns(mesh, b_ax, None, _maybe(("model",), cfg.vocab, mesh)
+                    if b_ax != ("model",) else None)
+    return LoweringSpec(
+        name=f"{arch_id}:{shape_name}", fn=fn,
+        args=(abstract_params, token, abstract_cache, index),
+        in_shardings=(p_sh, _ns(mesh, b_ax, None), cache_sh, _ns(mesh)),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(2,),
+        static_info=dict(kind="decode", tokens=B, cache_len=S))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_model(arch_id: str, shape_name: str, shape: Dict):
+    mod = registry.get(arch_id)
+    kind = shape["kind"]
+    readout = "sum" if kind == "graphs" else "none"
+    n_out = shape.get("n_classes", shape.get("n_out", 1))
+    d_in = shape["d_feat"]
+    if arch_id == "pna":
+        cfg = dataclasses.replace(mod.config(d_in=d_in, n_out=n_out,
+                                             readout=readout), remat=True)
+        return cfg, pna_init, pna_forward
+    if arch_id == "gatedgcn":
+        cfg = dataclasses.replace(mod.config(d_in=d_in, n_out=n_out,
+                                             readout=readout), remat=True)
+        return cfg, gatedgcn_init, gatedgcn_forward
+    if arch_id == "gin-tu":
+        cfg = dataclasses.replace(mod.config(d_in=d_in, n_out=n_out,
+                                             readout=readout), remat=True)
+        return cfg, gin_init, gin_forward
+    if arch_id == "dimenet":
+        cfg = dataclasses.replace(mod.config(d_in=d_in, n_out=n_out,
+                                             readout=readout), remat=True)
+        return cfg, dimenet_init, dimenet_forward
+    raise KeyError(arch_id)
+
+
+def _gnn_sizes(shape: Dict, mesh: Mesh) -> Tuple[int, int, int]:
+    """(n_pad, e_pad_directed, n_graphs) — padded to divide the mesh."""
+    total = int(np.prod(list(mesh.shape.values())))
+    unit = max(total, 512)
+    kind = shape["kind"]
+    if kind == "full":
+        n = _round_up(shape["n_nodes"], unit)
+        e = _round_up(2 * shape["n_edges"], unit)
+        return n, e, 1
+    if kind == "minibatch":
+        batch = shape["batch_nodes"]
+        n, e = batch, 0
+        cur = batch
+        for f in shape["fanout"]:
+            e += cur * f
+            cur += cur * f
+            n = cur
+        return _round_up(n, unit), _round_up(e, unit), 1
+    if kind == "graphs":
+        b = shape["batch"]
+        n = _round_up(b * shape["n_nodes"], unit)
+        e = _round_up(b * 2 * shape["n_edges"], unit)
+        return n, e, b
+    raise ValueError(kind)
+
+
+def gnn_cell(arch_id: str, shape_name: str, shape: Dict, mesh: Mesh) -> LoweringSpec:
+    cfg, init_fn, fwd_fn = _gnn_model(arch_id, shape_name, shape)
+    n_pad, e_pad, n_graphs = _gnn_sizes(shape, mesh)
+    all_ax = tuple(mesh.axis_names)
+    node_s = _ns(mesh, all_ax)
+    node_s2 = _ns(mesh, all_ax, None)
+    edge_s = _ns(mesh, all_ax)
+
+    f32, i32, b8 = jnp.float32, jnp.int32, jnp.bool_
+    batch = GraphBatch(
+        node_feat=jax.ShapeDtypeStruct((n_pad, shape["d_feat"]), f32),
+        src=jax.ShapeDtypeStruct((e_pad,), i32),
+        dst=jax.ShapeDtypeStruct((e_pad,), i32),
+        node_mask=jax.ShapeDtypeStruct((n_pad,), b8),
+        edge_mask=jax.ShapeDtypeStruct((e_pad,), b8),
+        graph_ids=jax.ShapeDtypeStruct((n_pad,), i32),
+        n_graphs=n_graphs,
+        labels=jax.ShapeDtypeStruct((n_pad,), i32),
+    )
+    batch_sh = GraphBatch(
+        node_feat=node_s2, src=edge_s, dst=edge_s, node_mask=node_s,
+        edge_mask=edge_s, graph_ids=node_s, n_graphs=n_graphs, labels=node_s)
+
+    is_graph_task = shape["kind"] == "graphs"
+
+    if arch_id == "dimenet":
+        t_cap = _round_up(e_pad * TRIPLET_BUDGET[shape_name],
+                          int(np.prod(list(mesh.shape.values()))))
+        trip = TripletBatch(
+            edge_src=jax.ShapeDtypeStruct((e_pad,), i32),
+            edge_dst=jax.ShapeDtypeStruct((e_pad,), i32),
+            edge_mask=jax.ShapeDtypeStruct((e_pad,), b8),
+            trip_in=jax.ShapeDtypeStruct((t_cap,), i32),
+            trip_out=jax.ShapeDtypeStruct((t_cap,), i32),
+            trip_mask=jax.ShapeDtypeStruct((t_cap,), b8))
+        trip_sh = TripletBatch(edge_src=edge_s, edge_dst=edge_s,
+                               edge_mask=edge_s, trip_in=edge_s,
+                               trip_out=edge_s, trip_mask=edge_s)
+        positions = jax.ShapeDtypeStruct((n_pad, 3), f32)
+        glabels = jax.ShapeDtypeStruct((n_graphs,), f32)
+
+        def loss_fn(params, b, pos, tr, glab):
+            out = dimenet_forward(params, b.node_feat, pos, tr, b.node_mask,
+                                  b.graph_ids, n_graphs, cfg)
+            if is_graph_task:
+                return graph_regression_loss(out, glab)
+            return node_classification_loss(out, b)
+
+        tcfg = TrainConfig(optimizer=AdamWConfig())
+        abstract_state = jax.eval_shape(
+            lambda k: make_train_state(init_fn(k, cfg), tcfg), KEY)
+        repl = shr.like_tree(abstract_state, _ns(mesh))
+
+        def train_step(state, b, pos, tr, glab):
+            from repro.train.train_step import TrainState
+            from repro.optim import apply_updates, global_norm, warmup_cosine
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, b, pos, tr, glab))(state.params)
+            lr = warmup_cosine(state.opt.step, 100, 10_000)
+            new_p, new_opt = apply_updates(state.params, grads, state.opt,
+                                           tcfg.optimizer, lr)
+            return TrainState(new_p, new_opt), loss
+
+        return LoweringSpec(
+            name=f"{arch_id}:{shape_name}", fn=train_step,
+            args=(abstract_state, batch, positions, trip, glabels),
+            in_shardings=(repl, batch_sh, node_s2, trip_sh, _ns(mesh)),
+            out_shardings=(repl, _ns(mesh)),
+            donate_argnums=(0,),
+            static_info=dict(kind="gnn_train", n=n_pad, e=e_pad, t=t_cap))
+
+    def loss_fn(params, b, glab):
+        out = fwd_fn(params, b, cfg)
+        if is_graph_task:
+            return graph_regression_loss(out, glab)
+        return node_classification_loss(out, b)
+
+    tcfg = TrainConfig(optimizer=AdamWConfig())
+    abstract_state = jax.eval_shape(
+        lambda k: make_train_state(init_fn(k, cfg), tcfg), KEY)
+    repl = shr.like_tree(abstract_state, _ns(mesh))
+    glabels = jax.ShapeDtypeStruct((n_graphs,), f32)
+
+    def train_step(state, b, glab):
+        from repro.train.train_step import TrainState
+        from repro.optim import apply_updates, warmup_cosine
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, b, glab))(state.params)
+        lr = warmup_cosine(state.opt.step, 100, 10_000)
+        new_p, new_opt = apply_updates(state.params, grads, state.opt,
+                                       tcfg.optimizer, lr)
+        return TrainState(new_p, new_opt), loss
+
+    return LoweringSpec(
+        name=f"{arch_id}:{shape_name}", fn=train_step,
+        args=(abstract_state, batch, glabels),
+        in_shardings=(repl, batch_sh, _ns(mesh)),
+        out_shardings=(repl, _ns(mesh)),
+        donate_argnums=(0,),
+        static_info=dict(kind="gnn_train", n=n_pad, e=e_pad))
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch(cfg, B: int, mesh: Mesh, dp):
+    i32, f32 = jnp.int32, jnp.float32
+    batch, batch_sh = {}, {}
+    bs = _ns(mesh, _maybe(dp, B, mesh))
+    bs2 = _ns(mesh, _maybe(dp, B, mesh), None)
+    for f in cfg.user_features:
+        if f.n_hot == 1:
+            batch[f.name] = jax.ShapeDtypeStruct((B,), i32)
+            batch_sh[f.name] = bs
+        else:
+            batch[f.name] = jax.ShapeDtypeStruct((B, f.n_hot), i32)
+            batch_sh[f.name] = bs2
+    for f in cfg.item_features:
+        batch[f.name] = jax.ShapeDtypeStruct((B,), i32)
+        batch_sh[f.name] = bs
+    batch["user_dense"] = jax.ShapeDtypeStruct((B, cfg.n_dense_user), f32)
+    batch["item_dense"] = jax.ShapeDtypeStruct((B, cfg.n_dense_item), f32)
+    batch_sh["user_dense"] = bs2
+    batch_sh["item_dense"] = bs2
+    return batch, batch_sh
+
+
+def _recsys_param_shardings(abstract_params, mesh):
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        if "tables" in names and leaf.ndim == 2:
+            ax = _maybe(("model",), leaf.shape[0], mesh)
+            return NamedSharding(mesh, P(ax, None))
+        return NamedSharding(mesh, P())
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = [spec(kp, leaf) for kp, leaf in flat[0]]
+    return jax.tree.unflatten(jax.tree.structure(abstract_params), specs)
+
+
+def recsys_cell(arch_id: str, shape_name: str, shape: Dict, mesh: Mesh
+                ) -> LoweringSpec:
+    mod = registry.get(arch_id)
+    cfg = mod.config()
+    dp = shr.data_axes(mesh)
+    kind = shape["kind"]
+    abstract_params = jax.eval_shape(lambda k: rs.init_params(k, cfg), KEY)
+    p_sh = _recsys_param_shardings(abstract_params, mesh)
+
+    if kind == "train":
+        B = shape["batch"]
+        batch, batch_sh = _recsys_batch(cfg, B, mesh, dp)
+        batch["item_logq"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+        batch_sh["item_logq"] = _ns(mesh, _maybe(dp, B, mesh))
+        tcfg = TrainConfig(optimizer=AdamWConfig())
+        abstract_state = jax.eval_shape(
+            lambda k: make_train_state(rs.init_params(k, cfg), tcfg), KEY)
+        from repro.train.train_step import TrainState
+        from repro.optim.optimizer import AdamWState
+        state_sh = TrainState(params=p_sh,
+                              opt=AdamWState(step=_ns(mesh), m=p_sh, v=p_sh))
+        step = make_train_step(lambda p, b: rs.sampled_softmax_loss(p, b, cfg),
+                               tcfg)
+        metrics_sh = {"loss": _ns(mesh), "grad_norm": _ns(mesh),
+                      "lr_scale": _ns(mesh)}
+        return LoweringSpec(
+            name=f"{arch_id}:{shape_name}", fn=step,
+            args=(abstract_state, batch),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,),
+            static_info=dict(kind="train", batch=B))
+
+    if kind == "serve":
+        B = shape["batch"]
+        batch, batch_sh = _recsys_batch(cfg, B, mesh, dp)
+        fn = lambda p, b: rs.score_pairs(p, b, cfg)
+        return LoweringSpec(
+            name=f"{arch_id}:{shape_name}", fn=fn,
+            args=(abstract_params, batch),
+            in_shardings=(p_sh, batch_sh),
+            out_shardings=_ns(mesh, _maybe(dp, B, mesh)),
+            static_info=dict(kind="serve", batch=B))
+
+    # retrieval: 1 user vs N candidates
+    N = shape["n_candidates"]
+    cand_ax = _maybe(("data",), N, mesh)
+    i32, f32 = jnp.int32, jnp.float32
+    batch = {}
+    batch_sh = {}
+    for f in cfg.user_features:
+        shp = (1,) if f.n_hot == 1 else (1, f.n_hot)
+        batch[f.name] = jax.ShapeDtypeStruct(shp, i32)
+        batch_sh[f.name] = _ns(mesh, *([None] * len(shp)))
+    for f in cfg.item_features:
+        batch[f.name] = jax.ShapeDtypeStruct((N,), i32)
+        batch_sh[f.name] = _ns(mesh, cand_ax)
+    batch["user_dense"] = jax.ShapeDtypeStruct((1, cfg.n_dense_user), f32)
+    batch["item_dense"] = jax.ShapeDtypeStruct((N, cfg.n_dense_item), f32)
+    batch_sh["user_dense"] = _ns(mesh, None, None)
+    batch_sh["item_dense"] = _ns(mesh, cand_ax, None)
+    fn = lambda p, b: tuple(rs.retrieval_topk(p, b, cfg, k=100))
+    return LoweringSpec(
+        name=f"{arch_id}:{shape_name}", fn=fn,
+        args=(abstract_params, batch),
+        in_shardings=(p_sh, batch_sh),
+        out_shardings=(_ns(mesh), _ns(mesh)),
+        static_info=dict(kind="retrieval", candidates=N))
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(cell: Cell, mesh: Mesh) -> LoweringSpec:
+    shr.set_activation_mesh(mesh)      # activation constraints trace with mesh
+    if cell.family == "lm":
+        return lm_cell(cell.arch_id, cell.shape_name, cell.shape, mesh)
+    if cell.family == "gnn":
+        return gnn_cell(cell.arch_id, cell.shape_name, cell.shape, mesh)
+    if cell.family == "recsys":
+        return recsys_cell(cell.arch_id, cell.shape_name, cell.shape, mesh)
+    raise ValueError(cell.family)

@@ -1,0 +1,12 @@
+"""Assigned-architecture model zoo (5 LM + 4 GNN + 1 recsys)."""
+from repro.models.transformer import (TransformerConfig, init_params,
+                                      forward, lm_loss, prefill, decode_step,
+                                      init_cache, param_count,
+                                      active_param_count)
+from repro.models.moe import MoEConfig
+from repro.models.mla import MLAConfig
+from repro.models import gnn, dimenet, recsys
+
+__all__ = ["TransformerConfig", "init_params", "forward", "lm_loss", "prefill",
+           "decode_step", "init_cache", "param_count", "active_param_count",
+           "MoEConfig", "MLAConfig", "gnn", "dimenet", "recsys"]

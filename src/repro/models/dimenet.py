@@ -1,0 +1,195 @@
+"""DimeNet — directional message passing (arXiv:2003.03123).
+
+Config (assigned): 6 interaction blocks, d_hidden 128, n_bilinear 8,
+n_spherical 7, n_radial 6.
+
+Messages live on *directed edges*; the triplet gather (k→j over edge j→i)
+is the kernel regime that distinguishes DimeNet from SpMM GNNs. Triplet
+index lists are **precomputed inputs** (standard for DimeNet impls) with a
+static cap; the data pipeline builds them (graph/triplets via
+``build_triplets``) and synthesises 3-D positions for non-molecular graphs
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    d_in: int = 0
+    n_out: int = 1
+    cutoff: float = 5.0
+    readout: str = "sum"
+    remat: bool = False
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TripletBatch:
+    """Precomputed directed-edge + triplet structure (static shapes).
+
+    edge_src/edge_dst: (E,) directed edges j->i
+    trip_in/trip_out:  (T,) indices into edges: message (k->j) feeds (j->i)
+    """
+
+    edge_src: jax.Array
+    edge_dst: jax.Array
+    edge_mask: jax.Array
+    trip_in: jax.Array
+    trip_out: jax.Array
+    trip_mask: jax.Array
+
+
+def build_triplets(src: np.ndarray, dst: np.ndarray, mask: np.ndarray,
+                   t_cap: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side triplet enumeration: pairs of directed edges (k->j), (j->i), k != i."""
+    e = src.shape[0]
+    live = np.flatnonzero(mask)
+    by_dst: Dict[int, list] = {}
+    for idx in live:
+        by_dst.setdefault(int(dst[idx]), []).append(idx)
+    t_in = np.full(t_cap, 0, np.int32)
+    t_out = np.full(t_cap, 0, np.int32)
+    t_ok = np.zeros(t_cap, bool)
+    t = 0
+    for out_idx in live:                       # edge j -> i
+        j = int(src[out_idx])
+        i = int(dst[out_idx])
+        for in_idx in by_dst.get(j, ()):       # edge k -> j
+            if int(src[in_idx]) == i:
+                continue
+            if t >= t_cap:
+                return t_in, t_out, t_ok
+            t_in[t] = in_idx
+            t_out[t] = out_idx
+            t_ok[t] = True
+            t += 1
+    return t_in, t_out, t_ok
+
+
+def _rbf(d: jax.Array, n_radial: int, cutoff: float) -> jax.Array:
+    """Radial Bessel basis."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    d = jnp.maximum(d, 1e-6)[:, None]
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d / cutoff) / d
+
+
+def _sbf(d: jax.Array, angle: jax.Array, n_spherical: int, n_radial: int,
+         cutoff: float) -> jax.Array:
+    """Simplified spherical basis: cos(l·θ) ⊗ Bessel_n(d) (l < n_spherical)."""
+    ls = jnp.arange(n_spherical, dtype=jnp.float32)
+    ang = jnp.cos(ls[None, :] * angle[:, None])                  # (T, S)
+    rad = _rbf(d, n_radial, cutoff)                              # (T, R)
+    return (ang[:, :, None] * rad[:, None, :]).reshape(d.shape[0], -1)
+
+
+def _lin_init(key, din, dout):
+    return {"w": jax.random.normal(key, (din, dout), jnp.float32) / math.sqrt(din),
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _lin(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def dimenet_init(key: jax.Array, cfg: DimeNetConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_blocks + 5)
+    d = cfg.d_hidden
+    sbf_dim = cfg.n_spherical * cfg.n_radial
+    p: Params = {
+        "embed_node": _lin_init(keys[0], cfg.d_in, d),
+        "embed_rbf": _lin_init(keys[1], cfg.n_radial, d),
+        "embed_msg": _lin_init(keys[2], 3 * d, d),
+    }
+    blocks = []
+    for i in range(cfg.n_blocks):
+        ks = jax.random.split(keys[i + 3], 6)
+        blocks.append({
+            "w_rbf": _lin_init(ks[0], cfg.n_radial, d),
+            "w_sbf": _lin_init(ks[1], sbf_dim, cfg.n_bilinear),
+            "bilinear": jax.random.normal(ks[2], (d, cfg.n_bilinear, d),
+                                          jnp.float32) / math.sqrt(d),
+            "w_src": _lin_init(ks[3], d, d),
+            "w_msg": _lin_init(ks[4], d, d),
+            "w_update": _lin_init(ks[5], d, d),
+        })
+    p["blocks"] = blocks
+    p["out_edge"] = _lin_init(keys[-2], d, d)
+    p["decode"] = _lin_init(keys[-1], d, cfg.n_out)
+    return p
+
+
+def dimenet_forward(params: Params, node_feat: jax.Array, positions: jax.Array,
+                    trip: TripletBatch, node_mask: jax.Array,
+                    graph_ids: jax.Array, n_graphs: int,
+                    cfg: DimeNetConfig) -> jax.Array:
+    n = node_feat.shape[0]
+    src = jnp.clip(trip.edge_src, 0, n - 1)
+    dst = jnp.clip(trip.edge_dst, 0, n - 1)
+    vec = positions[dst] - positions[src]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, -1), 1e-12))
+    rbf = _rbf(dist, cfg.n_radial, cfg.cutoff)                  # (E,R)
+
+    # triplet geometry: angle between edge (k->j) and (j->i)
+    e_in = jnp.clip(trip.trip_in, 0, src.shape[0] - 1)
+    e_out = jnp.clip(trip.trip_out, 0, src.shape[0] - 1)
+    v1 = -vec[e_in]                                              # j->k
+    v2 = vec[e_out]                                              # j->i
+    cos = jnp.sum(v1 * v2, -1) / jnp.maximum(
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-9)
+    angle = jnp.arccos(jnp.clip(cos, -1 + 1e-7, 1 - 1e-7))
+    sbf = _sbf(dist[e_out], angle, cfg.n_spherical, cfg.n_radial, cfg.cutoff)
+
+    # embedding block: message per directed edge
+    hx = constrain(jax.nn.silu(_lin(params["embed_node"], node_feat)), "flat", None)
+    hr = constrain(jax.nn.silu(_lin(params["embed_rbf"], rbf)), "flat", None)
+    m = constrain(jax.nn.silu(_lin(params["embed_msg"],
+                  jnp.concatenate([hx[src], hx[dst], hr], -1))), "flat", None)
+
+    out_nodes = jnp.zeros((n, cfg.d_hidden), jnp.float32)
+    e_count = src.shape[0]
+
+    def block_fn(blk, m, out_nodes):
+        # directional message update via SBF-bilinear triplet aggregation
+        m = constrain(m, "flat", None)
+        m_in = constrain(jax.nn.silu(_lin(blk["w_msg"], m))[e_in], "flat", None)
+        sb = constrain(_lin(blk["w_sbf"], sbf), "flat", None)     # (T,B)
+        inter = jnp.einsum("td,dbe,tb->te", m_in, blk["bilinear"], sb)
+        inter = constrain(jnp.where(trip.trip_mask[:, None], inter, 0),
+                          "flat", None)
+        agg = jax.ops.segment_sum(inter, jnp.where(trip.trip_mask, e_out, e_count),
+                                  num_segments=e_count + 1)[:e_count]
+        gate = jax.nn.silu(_lin(blk["w_rbf"], rbf))
+        m = m + jax.nn.silu(_lin(blk["w_src"], m)) * gate + agg
+        m = jnp.where(trip.edge_mask[:, None], m, 0)
+        out_nodes = out_nodes + jax.ops.segment_sum(
+            jax.nn.silu(_lin(params["out_edge"], m)),
+            jnp.where(trip.edge_mask, dst, n), num_segments=n + 1)[:n]
+        return m, out_nodes
+
+    step = jax.checkpoint(block_fn) if cfg.remat else block_fn
+    for blk in params["blocks"]:
+        m, out_nodes = step(blk, m, out_nodes)
+
+    out_nodes = jnp.where(node_mask[:, None], out_nodes, 0)
+    if cfg.readout == "sum":
+        g = jax.ops.segment_sum(out_nodes, graph_ids, num_segments=n_graphs)
+        return _lin(params["decode"], g)
+    return _lin(params["decode"], out_nodes)

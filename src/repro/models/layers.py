@@ -1,0 +1,229 @@
+"""Shared transformer building blocks (functional, explicit param pytrees).
+
+All params are plain nested dicts of jnp arrays so they shard transparently
+under pjit and can be abstract-initialised with ``jax.eval_shape`` for the
+multi-pod dry-run (no host allocation of 480B-parameter models).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / embeddings
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params: Params, tokens: jax.Array, scale_by_dim: bool = False) -> jax.Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(math.sqrt(x.shape[-1]), x.dtype)
+    return x
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    """Tied read-out: x @ table.T (f32 accumulation)."""
+    return jnp.einsum("...d,vd->...v", x, params["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D) rotated pairwise; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                           # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., :, None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA/MQA, optional sliding window + softcap), q-chunked softmax
+# ---------------------------------------------------------------------------
+
+def attention_init(key: jax.Array, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    so = 1.0 / math.sqrt(n_heads * head_dim)
+    return {
+        "wq": jax.random.normal(k1, (d_model, n_heads * head_dim), dtype) * s,
+        "wk": jax.random.normal(k2, (d_model, n_kv * head_dim), dtype) * s,
+        "wv": jax.random.normal(k3, (d_model, n_kv * head_dim), dtype) * s,
+        "wo": jax.random.normal(k4, (n_heads * head_dim, d_model), dtype) * so,
+    }
+
+
+def _attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            q_positions: jax.Array, kv_positions: jax.Array,
+            window: Optional[jax.Array], attn_softcap: Optional[float],
+            kv_mask: Optional[jax.Array]) -> jax.Array:
+    """Masked softmax attention. q: (B,Sq,H,D), k/v: (B,Sk,KV,D).
+
+    ``window`` may be a traced scalar (0 = full attention) so alternating
+    local/global layers can share one scan body (gemma-2 pattern).
+
+    Distribution: K/V (and hence scores) are sharded over the "model" mesh
+    axis along the KV-sequence dim (flash-decoding style). Works for any
+    head count (24 q-heads / 8 KV heads never divide a 16-way TP axis);
+    softmax max/sum reduce and the PV contraction psum across ranks are
+    inserted by GSPMD from the constraints.
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    k = constrain(k, "batch", "seq_sp", None, None)
+    v = constrain(v, "batch", "seq_sp", None, None)
+    qg = q.reshape(b, sq, kv, rep, d)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = constrain(scores, "batch", None, None, None, "seq_sp")
+    scores = scores / math.sqrt(d)
+    if attn_softcap is not None:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    causal = kv_positions[:, None, :] <= q_positions[:, :, None]      # (B,Sq,Sk)
+    mask = causal
+    if window is not None:
+        in_window = kv_positions[:, None, :] > (q_positions[:, :, None] - window)
+        mask = mask & jnp.where(window > 0, in_window, True)
+    if kv_mask is not None:
+        mask = mask & kv_mask[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    probs = constrain(probs, "batch", None, None, None, "seq_sp")
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def attention(params: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+              head_dim: int, positions: jax.Array,
+              window: Optional[jax.Array] = None,
+              attn_softcap: Optional[float] = None,
+              rope_theta: float = 10000.0,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              q_chunk: int = 2048,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full attention layer. Training when cache is None; decode otherwise.
+
+    Decode: x is (B, 1, d); cache = (k, v) with shape (B, S_max, KV, D); the
+    new KV row is written at ``cache_index`` and attention spans the cache.
+    """
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    q = constrain(q.reshape(b, s, n_heads, head_dim),
+                  "batch", "seq", "heads", None)
+    k = constrain(k.reshape(b, s, n_kv, head_dim),
+                  "batch", "seq", "heads", None)
+    v = constrain(v.reshape(b, s, n_kv, head_dim),
+                  "batch", "seq", "heads", None)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    if cache is None:
+        # ---- training / prefill: q-chunked to bound the score matrix -----
+        if s <= q_chunk:
+            out = _attend(q, k, v, q_positions=positions, kv_positions=positions,
+                          window=window, attn_softcap=attn_softcap, kv_mask=None)
+        else:
+            n_chunks = s // q_chunk
+            assert n_chunks * q_chunk == s, "seq_len must divide q_chunk"
+
+            def chunk_fn(carry, i):
+                q_c = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+                p_c = jax.lax.dynamic_slice_in_dim(positions, i * q_chunk, q_chunk, axis=1)
+                o = _attend(q_c, k, v, q_positions=p_c, kv_positions=positions,
+                            window=window, attn_softcap=attn_softcap, kv_mask=None)
+                return carry, o
+
+            _, outs = jax.lax.scan(chunk_fn, None, jnp.arange(n_chunks))
+            out = jnp.moveaxis(outs, 0, 1).reshape(b, s, n_heads, head_dim)
+        new_cache = None
+    else:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_index, axis=1)
+        s_max = ck.shape[1]
+        kv_pos = jnp.arange(s_max, dtype=jnp.int32)[None, :].repeat(b, 0)
+        kv_valid = kv_pos <= cache_index
+        out = _attend(q, ck, cv, q_positions=positions, kv_positions=kv_pos,
+                      window=window, attn_softcap=attn_softcap, kv_mask=kv_valid)
+        new_cache = (ck, cv)
+
+    return out.reshape(b, s, n_heads * head_dim) @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs (gelu / swiglu / geglu)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, kind: str,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    if kind == "gelu":
+        return {"w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+                "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
+    return {"w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+            "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+            "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out}
+
+
+def mlp(params: Params, x: jax.Array, kind: str) -> jax.Array:
+    cst = lambda h: constrain(h, "batch", "seq", "d_ff")
+    if kind == "gelu":
+        return cst(jax.nn.gelu(x @ params["w_up"])) @ params["w_down"]
+    if kind == "swiglu":
+        h = cst(jax.nn.silu(x @ params["w_gate"])) * cst(x @ params["w_up"])
+        return h @ params["w_down"]
+    if kind == "geglu":
+        h = cst(jax.nn.gelu(x @ params["w_gate"])) * cst(x @ params["w_up"])
+        return h @ params["w_down"]
+    raise ValueError(kind)

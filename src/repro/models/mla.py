@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a rank-``kv_lora`` latent (plus a shared RoPE key
+head); the decode cache stores only (latent, k_rope) — the compression that
+makes deepseek-v2-lite's 32k decode cache small. Up-projections reconstruct
+per-head K_nope and V from the latent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+from repro.runtime.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    n_heads: int = 16
+    kv_lora: int = 512
+    rope_dim: int = 64
+    nope_dim: int = 128
+    v_dim: int = 128
+
+
+def mla_init(key: jax.Array, d_model: int, cfg: MLAConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d_model)
+    sl = 1.0 / math.sqrt(cfg.kv_lora)
+    h = cfg.n_heads
+    return {
+        "wq": jax.random.normal(k1, (d_model, h * (cfg.nope_dim + cfg.rope_dim)), dtype) * s,
+        "w_dkv": jax.random.normal(k2, (d_model, cfg.kv_lora + cfg.rope_dim), dtype) * s,
+        "w_uk": jax.random.normal(k3, (cfg.kv_lora, h * cfg.nope_dim), dtype) * sl,
+        "w_uv": jax.random.normal(k4, (cfg.kv_lora, h * cfg.v_dim), dtype) * sl,
+        "wo": jax.random.normal(k5, (h * cfg.v_dim, d_model), dtype) * (1.0 / math.sqrt(h * cfg.v_dim)),
+    }
+
+
+def _mla_attend(q_nope, q_rope, k_nope, k_rope, v, q_pos, kv_pos, kv_mask):
+    """q_nope (B,Sq,H,Dn)  q_rope (B,Sq,H,Dr)  k_rope shared (B,Sk,Dr).
+
+    KV-sequence-sharded over "model" (see layers._attend)."""
+    scale = 1.0 / math.sqrt(q_nope.shape[-1] + q_rope.shape[-1])
+    k_nope = constrain(k_nope, "batch", "seq_sp", None, None)
+    v = constrain(v, "batch", "seq_sp", None, None)
+    k_rope = constrain(k_rope, "batch", "seq_sp", None)
+    s_nope = jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = constrain((s_nope + s_rope) * scale,
+                       "batch", None, None, "seq_sp")
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if kv_mask is not None:
+        mask = mask & kv_mask[:, None, :]
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    probs = constrain(probs, "batch", None, None, "seq_sp")
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+
+def mla_attention(params: Params, x: jax.Array, cfg: MLAConfig, *,
+                  positions: jax.Array, rope_theta: float = 10000.0,
+                  cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  q_chunk: int = 2048,
+                  ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """MLA layer. cache = (latent (B,S,kv_lora), k_rope (B,S,rope_dim))."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = constrain((x @ params["wq"]).reshape(b, s, h, cfg.nope_dim + cfg.rope_dim),
+                  "batch", "seq", "heads", None)
+    q_nope, q_rope = q[..., : cfg.nope_dim], q[..., cfg.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    dkv = x @ params["w_dkv"]                              # (B,S,lora+rope)
+    latent, k_rope = dkv[..., : cfg.kv_lora], dkv[..., cfg.kv_lora:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        k_nope = constrain((latent @ params["w_uk"]).reshape(b, s, h, cfg.nope_dim),
+                           "batch", "seq", "heads", None)
+        v = constrain((latent @ params["w_uv"]).reshape(b, s, h, cfg.v_dim),
+                      "batch", "seq", "heads", None)
+        if s <= q_chunk:
+            out = _mla_attend(q_nope, q_rope, k_nope, k_rope, v,
+                              positions, positions, None)
+        else:
+            n_chunks = s // q_chunk
+            assert n_chunks * q_chunk == s
+
+            def chunk_fn(_, i):
+                qn = jax.lax.dynamic_slice_in_dim(q_nope, i * q_chunk, q_chunk, 1)
+                qr = jax.lax.dynamic_slice_in_dim(q_rope, i * q_chunk, q_chunk, 1)
+                pc = jax.lax.dynamic_slice_in_dim(positions, i * q_chunk, q_chunk, 1)
+                return None, _mla_attend(qn, qr, k_nope, k_rope, v, pc,
+                                         positions, None)
+
+            _, outs = jax.lax.scan(chunk_fn, None, jnp.arange(n_chunks))
+            out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, cfg.v_dim)
+        new_cache = None
+    else:
+        c_lat, c_rope = cache
+        c_lat = jax.lax.dynamic_update_slice_in_dim(
+            c_lat, latent.astype(c_lat.dtype), cache_index, axis=1)
+        c_rope = jax.lax.dynamic_update_slice_in_dim(
+            c_rope, k_rope.astype(c_rope.dtype), cache_index, axis=1)
+        s_max = c_lat.shape[1]
+        k_nope = (c_lat @ params["w_uk"]).reshape(b, s_max, h, cfg.nope_dim)
+        v = (c_lat @ params["w_uv"]).reshape(b, s_max, h, cfg.v_dim)
+        kv_pos = jnp.arange(s_max, dtype=jnp.int32)[None, :].repeat(b, 0)
+        kv_valid = kv_pos <= cache_index
+        out = _mla_attend(q_nope, q_rope, k_nope, c_rope, v,
+                          positions, kv_pos, kv_valid)
+        new_cache = (c_lat, c_rope)
+
+    return out.reshape(b, s, h * cfg.v_dim) @ params["wo"], new_cache

@@ -1,0 +1,164 @@
+"""Two-tower retrieval model (YouTube RecSys'19 style).
+
+embed_dim 256, tower MLPs 1024-512-256, dot-product interaction, sampled
+softmax with logQ correction over in-batch negatives.
+
+EmbeddingBag is built from ``jnp.take`` + ``jax.ops.segment_sum`` (JAX has no
+native EmbeddingBag — this is part of the system, per the assignment); the
+Pallas ``embedding_bag`` kernel serves the same contract on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    name: str
+    vocab: int
+    dim: int
+    n_hot: int = 1                 # multi-hot bag size (fixed, padded)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    user_features: Tuple[FeatureSpec, ...] = (
+        FeatureSpec("user_id", 10_000_000, 128),
+        FeatureSpec("user_geo", 100_000, 32),
+        FeatureSpec("user_hist", 2_000_000, 64, n_hot=16),   # watched items bag
+        FeatureSpec("user_device", 64, 16),
+    )
+    item_features: Tuple[FeatureSpec, ...] = (
+        FeatureSpec("item_id", 2_000_000, 128),
+        FeatureSpec("item_topic", 50_000, 64),
+        FeatureSpec("item_creator", 500_000, 48),
+    )
+    n_dense_user: int = 8
+    n_dense_item: int = 4
+    temperature: float = 0.05
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: Optional[jax.Array] = None,
+                  combine: str = "mean") -> jax.Array:
+    """(B, n_hot) indices → (B, dim). take + segment-reduce (mean over valid).
+
+    indices < 0 are padding. This is the pure-jnp contract the Pallas kernel
+    (kernels/embedding_bag.py) implements for TPU.
+    """
+    b, h = indices.shape
+    valid = indices >= 0
+    safe = jnp.clip(indices, 0, table.shape[0] - 1)
+    rows = jnp.take(table, safe.reshape(-1), axis=0).reshape(b, h, -1)
+    rows = jnp.where(valid[..., None], rows, 0)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    out = rows.sum(axis=1)
+    if combine == "mean":
+        out = out / jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+    return out
+
+
+def _tower_init(key: jax.Array, feats: Tuple[FeatureSpec, ...], n_dense: int,
+                mlp: Tuple[int, ...], out_dim: int) -> Params:
+    keys = jax.random.split(key, len(feats) + len(mlp) + 1)
+    p: Params = {"tables": {}}
+    for i, f in enumerate(feats):
+        p["tables"][f.name] = jax.random.normal(
+            keys[i], (f.vocab, f.dim), jnp.float32) * (1.0 / math.sqrt(f.dim))
+    d_in = sum(f.dim for f in feats) + n_dense
+    dims = [d_in] + list(mlp)
+    p["mlp"] = []
+    for i in range(len(mlp)):
+        k = keys[len(feats) + i]
+        p["mlp"].append({
+            "w": jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+                 / math.sqrt(dims[i]),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32)})
+    return p
+
+
+def init_params(key: jax.Array, cfg: TwoTowerConfig) -> Params:
+    ku, ki = jax.random.split(key)
+    return {
+        "user": _tower_init(ku, cfg.user_features, cfg.n_dense_user,
+                            cfg.tower_mlp, cfg.embed_dim),
+        "item": _tower_init(ki, cfg.item_features, cfg.n_dense_item,
+                            cfg.tower_mlp, cfg.embed_dim),
+    }
+
+
+def _tower(params: Params, feats: Tuple[FeatureSpec, ...],
+           cat_inputs: Dict[str, jax.Array], dense: jax.Array) -> jax.Array:
+    parts: List[jax.Array] = []
+    for f in feats:
+        idx = cat_inputs[f.name]
+        if idx.ndim == 1:
+            idx = idx[:, None]
+        parts.append(embedding_bag(params["tables"][f.name], idx))
+    x = jnp.concatenate(parts + [dense], axis=-1)
+    for i, layer in enumerate(params["mlp"]):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params["mlp"]):
+            x = jax.nn.relu(x)
+    # L2-normalised embeddings (standard for dot-product retrieval)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def user_embed(params: Params, batch: Dict[str, jax.Array],
+               cfg: TwoTowerConfig) -> jax.Array:
+    return _tower(params["user"], cfg.user_features, batch, batch["user_dense"])
+
+
+def item_embed(params: Params, batch: Dict[str, jax.Array],
+               cfg: TwoTowerConfig) -> jax.Array:
+    return _tower(params["item"], cfg.item_features, batch, batch["item_dense"])
+
+
+def sampled_softmax_loss(params: Params, batch: Dict[str, jax.Array],
+                         cfg: TwoTowerConfig) -> jax.Array:
+    """In-batch sampled softmax with logQ correction.
+
+    batch carries user features, positive-item features and ``item_logq``
+    (log sampling probability of each in-batch item).
+    """
+    u = user_embed(params, batch, cfg)                       # (B, D)
+    v = item_embed(params, batch, cfg)                       # (B, D)
+    logits = (u @ v.T) / cfg.temperature                     # (B, B)
+    logq = batch.get("item_logq")
+    if logq is not None:
+        logits = logits - logq[None, :]
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def score_pairs(params: Params, batch: Dict[str, jax.Array],
+                cfg: TwoTowerConfig) -> jax.Array:
+    """Online/bulk scoring: one score per (user, item) row."""
+    u = user_embed(params, batch, cfg)
+    v = item_embed(params, batch, cfg)
+    return jnp.sum(u * v, axis=-1)
+
+
+def retrieval_scores(params: Params, batch: Dict[str, jax.Array],
+                     cfg: TwoTowerConfig) -> jax.Array:
+    """One query against N candidates: (1,D) x (N,D) -> (N,) + top-k."""
+    u = user_embed(params, batch, cfg)                       # (1, D)
+    v = item_embed(params, batch, cfg)                       # (N, D)
+    return (v @ u[0]).astype(jnp.float32)
+
+
+def retrieval_topk(params: Params, batch: Dict[str, jax.Array],
+                   cfg: TwoTowerConfig, k: int = 100):
+    return jax.lax.top_k(retrieval_scores(params, batch, cfg), k)

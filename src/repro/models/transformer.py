@@ -1,0 +1,353 @@
+"""Decoder-only transformer LM covering the five assigned architectures.
+
+granite-34b   : 88L MQA(kv=1) + GELU MLP
+gemma2-9b     : 42L GQA(kv=8) head_dim 256, alternating local(4096)/global
+                attention, attn/final logit soft-caps, sandwich norms, GeGLU
+phi4-mini     : 32L GQA(kv=8) RoPE SwiGLU, tied embeddings
+arctic-480b   : 35L GQA(kv=8) + [dense SwiGLU ∥ 128-expert top-2 MoE]
+deepseek-v2-lite : 27L MLA(kv_lora 512) + 64-expert top-6 MoE (2 shared,
+                first layer dense)
+
+Layers are lax.scan-stacked (HLO is O(1) in depth — essential for the
+512-device dry-run) with optional remat. Params are nested dicts;
+``jax.eval_shape(init_params, ...)`` gives the abstract pytree the dry-run
+lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.mla import MLAConfig, mla_attention, mla_init
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.runtime.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    mlp_kind: str = "swiglu"
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    local_window: int = 0               # >0 enables sliding-window layers
+    layer_pattern: str = "global"       # "global" | "local_global"
+    post_norm: bool = False             # gemma2 sandwich norms
+    embed_scale: bool = False           # gemma2 multiplies embeddings by sqrt(d)
+    tie_embeddings: bool = True
+    moe: Optional[MoEConfig] = None
+    moe_dense_residual: bool = False    # arctic: dense FFN + MoE summed
+    moe_first_dense: int = 0            # deepseek: first N layers use dense FFN
+    first_dense_dff: int = 0            # ... with this hidden size
+    mla: Optional[MLAConfig] = None
+    param_dtype: Any = jnp.float32
+    q_chunk: int = 1024
+    remat: bool = False
+    loss_chunk: int = 0           # >0: chunked cross-entropy over seq (big vocab)
+    unroll_layers: bool = False   # inline the layer scan (cost-analysis calibration)
+
+    @property
+    def n_scanned(self) -> int:
+        return self.n_layers - self.moe_first_dense
+
+    def layer_windows(self) -> jnp.ndarray:
+        """Per-layer sliding window (0 = global)."""
+        w = []
+        for i in range(self.n_layers):
+            local = (self.layer_pattern == "local_global") and (i % 2 == 0)
+            w.append(self.local_window if local else 0)
+        return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key: jax.Array, cfg: TransformerConfig, dense_override: int = 0
+                ) -> Params:
+    ka, km, ke = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    p: Params = {"ln_attn": L.rmsnorm_init(cfg.d_model, dt),
+                 "ln_mlp": L.rmsnorm_init(cfg.d_model, dt)}
+    if cfg.post_norm:
+        p["ln_attn_post"] = L.rmsnorm_init(cfg.d_model, dt)
+        p["ln_mlp_post"] = L.rmsnorm_init(cfg.d_model, dt)
+    if cfg.mla is not None:
+        p["attn"] = mla_init(ka, cfg.d_model, cfg.mla, dt)
+    else:
+        p["attn"] = L.attention_init(ka, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dt)
+    use_moe = cfg.moe is not None and dense_override == 0
+    if use_moe:
+        p["moe"] = moe_init(km, cfg.d_model, cfg.moe, dt)
+        if cfg.moe_dense_residual:
+            p["mlp"] = L.mlp_init(ke, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dt)
+    else:
+        dff = dense_override or cfg.d_ff
+        p["mlp"] = L.mlp_init(ke, cfg.d_model, dff, cfg.mlp_kind, dt)
+    return p
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> Params:
+    k_embed, k_layers, k_dense, k_head = jax.random.split(key, 4)
+    params: Params = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": jax.random.normal(k_head, (cfg.d_model, cfg.vocab),
+                                   cfg.param_dtype) * (cfg.d_model ** -0.5)}
+    # scanned homogeneous layers
+    keys = jax.random.split(k_layers, cfg.n_scanned)
+    params["layers"] = jax.vmap(lambda k: _layer_init(k, cfg))(keys)
+    # unscanned leading dense layers (deepseek layer 0)
+    if cfg.moe_first_dense:
+        dkeys = jax.random.split(k_dense, cfg.moe_first_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, dense_override=cfg.first_dense_dff))(dkeys)
+    return params
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    import math
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: TransformerConfig) -> int:
+    """Parameters touched per token (MoE counts top_k + shared experts only)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    expert_p = 3 * cfg.d_model * cfg.moe.d_ff
+    inactive = cfg.n_scanned * (e - k) * expert_p
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg: TransformerConfig, p: Params, x: jax.Array, *,
+           positions: jax.Array, window: jax.Array,
+           cache: Optional[Tuple] = None, cache_index=None):
+    """One transformer block. Returns (x, new_cache, aux_loss)."""
+    x = constrain(x, "batch", "seq_sp", None)
+    h = L.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, new_cache = mla_attention(
+            p["attn"], h, cfg.mla, positions=positions,
+            rope_theta=cfg.rope_theta, cache=cache, cache_index=cache_index,
+            q_chunk=cfg.q_chunk)
+    else:
+        attn_out, new_cache = L.attention(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, window=window,
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            cache=cache, cache_index=cache_index, q_chunk=cfg.q_chunk)
+    if cfg.post_norm:
+        attn_out = L.rmsnorm(p["ln_attn_post"], attn_out, cfg.norm_eps)
+    x = x + attn_out
+
+    h = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        moe_out, aux = moe_apply(p["moe"], h, cfg.moe)
+        if cfg.moe_dense_residual and "mlp" in p:
+            moe_out = moe_out + L.mlp(p["mlp"], h, cfg.mlp_kind)
+        ff_out = moe_out
+    else:
+        ff_out = L.mlp(p["mlp"], h, cfg.mlp_kind)
+    if cfg.post_norm:
+        ff_out = L.rmsnorm(p["ln_mlp_post"], ff_out, cfg.norm_eps)
+    return constrain(x + ff_out, "batch", "seq", None), new_cache, aux
+
+
+def forward_hidden(params: Params, tokens: jax.Array, cfg: TransformerConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Backbone forward: tokens (B,S) -> (final hidden (B,S,d), aux_loss)."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg.embed_scale).astype(cfg.param_dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    windows = cfg.layer_windows()
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.moe_first_dense:
+        def dense_body(carry, layer_p):
+            x, aux = carry
+            x, _, a = _block(cfg, layer_p, x, positions=positions,
+                             window=jnp.int32(0))
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(
+            dense_body, (x, aux_total), params["dense_layers"])
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_p, window = xs
+        x, _, a = _block(cfg, layer_p, x, positions=positions, window=window)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    scan_windows = windows[cfg.moe_first_dense:]
+    (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total),
+                                     (params["layers"], scan_windows),
+                                     unroll=cfg.n_scanned if cfg.unroll_layers else 1)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def logits_from_hidden(params: Params, x: jax.Array, cfg: TransformerConfig
+                       ) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"],
+                            preferred_element_type=jnp.float32)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return L.softcap(logits, cfg.final_softcap)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training forward: tokens (B,S) -> (logits (B,S,V) f32, aux_loss)."""
+    x, aux = forward_hidden(params, tokens, cfg)
+    return logits_from_hidden(params, x, cfg), aux
+
+
+def _ce(logits: jax.Array, labels: jax.Array, mask: jax.Array
+        ) -> Tuple[jax.Array, jax.Array]:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum(), mask.sum()
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: TransformerConfig,
+            aux_weight: float = 0.01) -> jax.Array:
+    """Next-token cross entropy (+ MoE aux).
+
+    With cfg.loss_chunk > 0 the (B,S,V) logits tensor is never materialised:
+    the unembed + CE run chunk-by-chunk over the sequence under lax.scan with
+    rematerialisation — the standard big-vocab memory optimisation.
+    """
+    x, aux = forward_hidden(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    s = labels.shape[1]
+    chunk = cfg.loss_chunk
+    if chunk and s % chunk == 0 and s > chunk:
+        n_chunks = s // chunk
+
+        @jax.checkpoint
+        def chunk_loss(xc, yc, mc):
+            logits = logits_from_hidden(params, xc, cfg)
+            return _ce(logits, yc, mc)
+
+        def body(carry, i):
+            tot, cnt = carry
+            xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+            yc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+            mc = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+            t, c = chunk_loss(xc, yc, mc)
+            return (tot + t, cnt + c), None
+
+        (total, count), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(n_chunks))
+    else:
+        logits = logits_from_hidden(params, x, cfg)
+        total, count = _ce(logits, labels, mask)
+    loss = total / jnp.maximum(count, 1.0)
+    return loss + aux_weight * aux / max(cfg.n_layers, 1)
+
+
+# ---------------------------------------------------------------------------
+# serving (prefill + decode with KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, s_max: int,
+               dtype=None) -> Tuple:
+    dt = dtype or cfg.param_dtype
+    n = cfg.n_layers
+    if cfg.mla is not None:
+        return (jnp.zeros((n, batch, s_max, cfg.mla.kv_lora), dt),
+                jnp.zeros((n, batch, s_max, cfg.mla.rope_dim), dt))
+    return (jnp.zeros((n, batch, s_max, cfg.n_kv_heads, cfg.head_dim), dt),
+            jnp.zeros((n, batch, s_max, cfg.n_kv_heads, cfg.head_dim), dt))
+
+
+def decode_step(params: Params, token: jax.Array, cache: Tuple,
+                index: jax.Array, cfg: TransformerConfig
+                ) -> Tuple[jax.Array, Tuple]:
+    """One decode step. token (B,1) int32; index scalar int32 — write position.
+
+    Lowered as ``serve_step`` for the decode_32k / long_500k dry-run cells.
+    """
+    b = token.shape[0]
+    x = L.embed(params["embed"], token, cfg.embed_scale).astype(cfg.param_dtype)
+    positions = jnp.full((b, 1), index, jnp.int32)
+    windows = cfg.layer_windows()
+
+    layer_off = cfg.moe_first_dense
+    c0, c1 = cache
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe_first_dense:
+        def dense_body(carry, xs):
+            x, aux = carry
+            layer_p, lc0, lc1 = xs
+            x, nc, a = _block(cfg, layer_p, x, positions=positions,
+                              window=jnp.int32(0), cache=(lc0, lc1),
+                              cache_index=index)
+            return (x, aux + a), nc
+        (x, aux), dense_cache = jax.lax.scan(
+            dense_body, (x, aux),
+            (params["dense_layers"], c0[:layer_off], c1[:layer_off]))
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_p, window, lc0, lc1 = xs
+        x, nc, a = _block(cfg, layer_p, x, positions=positions, window=window,
+                          cache=(lc0, lc1), cache_index=index)
+        return (x, aux + a), nc
+
+    (x, aux), scan_cache = jax.lax.scan(
+        body, (x, aux),
+        (params["layers"], windows[layer_off:], c0[layer_off:], c1[layer_off:]),
+        unroll=cfg.n_scanned if cfg.unroll_layers else 1)
+
+    if cfg.moe_first_dense:
+        new_c0 = jnp.concatenate([dense_cache[0], scan_cache[0]], axis=0)
+        new_c1 = jnp.concatenate([dense_cache[1], scan_cache[1]], axis=0)
+    else:
+        new_c0, new_c1 = scan_cache
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"],
+                            preferred_element_type=jnp.float32)
+    return L.softcap(logits, cfg.final_softcap), (new_c0, new_c1)
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig
+            ) -> jax.Array:
+    """Prefill forward returning last-position logits (cache write elided —
+    the dry-run prefill cell measures the compute-dominant forward)."""
+    logits, _ = forward(params, tokens, cfg)
+    return logits[:, -1, :]

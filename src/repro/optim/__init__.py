@@ -1,0 +1,6 @@
+from repro.optim.optimizer import (AdamWConfig, AdamWState, QTensor,
+                                   apply_updates, global_norm, init_state,
+                                   warmup_cosine)
+
+__all__ = ["AdamWConfig", "AdamWState", "QTensor", "apply_updates",
+           "global_norm", "init_state", "warmup_cosine"]

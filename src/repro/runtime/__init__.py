@@ -1,0 +1,4 @@
+from repro.runtime.elastic import elastic_rescale, rescale_assignment
+from repro.runtime import sharding
+
+__all__ = ["elastic_rescale", "rescale_assignment", "sharding"]

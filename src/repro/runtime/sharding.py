@@ -1,0 +1,200 @@
+"""Sharding rules: logical-axis → mesh-axis mapping (MaxText-style).
+
+The production mesh is ("data", "model") per pod, optionally with a leading
+"pod" axis. Strategy (DESIGN.md §6):
+
+  * batch-like dims          → ("pod", "data")
+  * TP dims (heads, d_ff,
+    vocab, experts)          → "model"
+  * FSDP dim (the largest
+    remaining param dim)     → "data"   (ZeRO: optimizer state inherits)
+  * KV-cache sequence        → "model"  (flash-decoding style)
+  * GNN node/edge dims       → flattened ("data", "model") device axis
+  * embedding-table vocab    → "model"
+
+Rules are expressed as predicates over param-tree paths so they apply to any
+of the ten architectures without per-model tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    size = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple) else (axes,))]))
+    return dim % size == 0
+
+
+def lm_param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """2-D sharding for transformer params: TP over "model", FSDP over "data".
+
+    path is the '/'-joined param tree path (e.g. "layers/attn/wq").
+    """
+    fsdp = "data"
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    # stacked-layer leading dim (scan) is never sharded
+    lead = 1 if path.startswith(("layers/", "dense_layers/")) else 0
+
+    def spec_for(dims):
+        full = [None] * nd
+        for i, a in dims.items():
+            full[i] = a
+        return P(*full)
+
+    name = path.split("/")[-1]
+    d = {}
+    if name in ("wq", "wk", "wv", "w_gate", "w_up"):            # (d_model, out)
+        if nd - lead == 2:
+            if _divisible(shape[-1], mesh, "model"):
+                d[nd - 1] = "model"
+            if _divisible(shape[-2], mesh, fsdp):
+                d[nd - 2] = fsdp
+        elif nd - lead == 3:                                     # experts (E,d,f)
+            if _divisible(shape[lead], mesh, "model"):
+                d[lead] = "model"
+            if _divisible(shape[-1], mesh, fsdp):
+                d[nd - 1] = fsdp
+    elif name in ("wo", "w_down"):                               # (in, d_model)
+        if nd - lead == 2:
+            if _divisible(shape[-2], mesh, "model"):
+                d[nd - 2] = "model"
+            if _divisible(shape[-1], mesh, fsdp):
+                d[nd - 1] = fsdp
+        elif nd - lead == 3:
+            if _divisible(shape[lead], mesh, "model"):
+                d[lead] = "model"
+            if _divisible(shape[-2], mesh, fsdp):
+                d[nd - 2] = fsdp
+    elif name in ("table", "w") and nd - lead == 2:              # embed / lm_head
+        big = nd - 2 if shape[nd - 2] >= shape[nd - 1] else nd - 1
+        small = nd - 1 if big == nd - 2 else nd - 2
+        if _divisible(shape[big], mesh, "model"):
+            d[big] = "model"
+        if _divisible(shape[small], mesh, fsdp):
+            d[small] = fsdp
+    elif name in ("w_dkv", "w_uk", "w_uv", "router"):
+        if _divisible(shape[-1], mesh, "model"):
+            d[nd - 1] = "model"
+        if _divisible(shape[-2], mesh, fsdp):
+            d[nd - 2] = fsdp
+    else:                                                        # norms, scalars
+        return P()
+    return spec_for(d)
+
+
+def lm_param_shardings(abstract_params: Any, mesh: Mesh) -> Any:
+    """NamedSharding pytree matching an abstract param pytree."""
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    treedef = jax.tree.structure(abstract_params)
+
+    def path_str(kp) -> str:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+        return "/".join(parts)
+
+    specs = [NamedSharding(mesh, lm_param_spec(path_str(kp), leaf.shape, mesh))
+             for kp, leaf in paths_and_leaves]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def batch_spec(mesh: Mesh, extra: int = 1) -> P:
+    """(B, ...) batch sharding over ("pod","data")."""
+    return P(data_axes(mesh), *([None] * extra))
+
+
+def token_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh), None)
+
+
+def cache_spec(mesh: Mesh, mla: bool = False) -> P:
+    """KV cache (L, B, S, ...): B over data axes, S over model."""
+    if mla:
+        return P(None, data_axes(mesh), "model", None)
+    return P(None, data_axes(mesh), "model", None, None)
+
+
+def node_spec(mesh: Mesh, extra: int = 0) -> P:
+    """GNN node/edge arrays: leading dim over every mesh axis (flattened)."""
+    return P(tuple(mesh.axis_names), *([None] * extra))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def like_tree(tree: Any, sharding: NamedSharding) -> Any:
+    return jax.tree.map(lambda _: sharding, tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (MaxText-style logical rules).
+#
+# GSPMD alone drops batch sharding on activations once FSDP-sharded weights
+# enter the picture (it prefers resharding activations over all-gathering
+# weights). Models call ``constrain(x, <logical axes>)`` at block boundaries;
+# when no activation mesh is installed (unit tests, single-device) it is a
+# no-op, so model code stays mesh-agnostic.
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_MESH: Any = None
+
+LOGICAL = {
+    "batch": None,      # resolved to ("pod","data") / ("data",)
+    "seq": None,
+    "heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "d_model": None,
+    "none": None,
+}
+
+
+def set_activation_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+
+
+def get_activation_mesh() -> Optional[Mesh]:
+    return _ACTIVATION_MESH
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Pin activation sharding by logical axis names (no-op without a mesh)."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    spec = []
+    for i, name in enumerate(logical_axes):
+        if name == "batch":
+            axes = data_axes(mesh)
+            spec.append(axes if x.shape[i] % int(
+                np.prod([mesh.shape[a] for a in axes])) == 0 else None)
+        elif name in ("heads", "d_ff", "vocab", "experts", "seq_sp"):
+            # seq_sp = Megatron-style sequence parallelism: the residual
+            # stream is sharded over "model" between blocks; GSPMD inserts
+            # the all-gather (pre-attention/MLP) + reduce-scatter (post).
+            spec.append("model" if x.shape[i] % mesh.shape["model"] == 0 else None)
+        elif name == "flat":
+            # GNN node/edge/triplet arrays: shard over every mesh axis
+            axes = tuple(mesh.axis_names)
+            spec.append(axes if x.shape[i] % int(
+                np.prod([mesh.shape[a] for a in axes])) == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

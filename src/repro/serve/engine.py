@@ -1,0 +1,109 @@
+"""Batched serving engine: continuous-batching decode over a KV cache.
+
+A scaled-down vLLM-style loop: requests enter a queue, join the running
+batch at free slots, decode one token per engine step for every active slot,
+and leave on EOS/max-len. Slot state (cache rows) is reused in place; the
+decode step itself is the jit'd ``serve_step`` the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import TransformerConfig, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: int = 2
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching (B slots, shared position clock)."""
+
+    def __init__(self, params: Any, cfg: TransformerConfig, batch_slots: int,
+                 max_seq: int, greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, batch_slots, max_seq)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.active = np.zeros(batch_slots, bool)
+        self.pos = np.zeros(batch_slots, np.int64)
+        self.budget = np.zeros(batch_slots, np.int64)
+        self.uid = np.full(batch_slots, -1, np.int64)
+        self.outputs: Dict[int, List[int]] = {}
+        self.queue: Deque[Request] = deque()
+        self.greedy = greedy
+        self._step = jax.jit(
+            lambda p, t, c, i: decode_step(p, t, c, i, cfg))
+        self.clock = 0                         # global position index
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.b):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            # prefill by stepping the prompt tokens through the decoder
+            toks = req.prompt.astype(np.int32)
+            for t in toks:
+                tok = self.tokens.at[slot, 0].set(int(t))
+                logits, self.cache = self._step(self.params, tok, self.cache,
+                                                jnp.int32(self.clock))
+                self.tokens = tok
+                self.clock += 1
+            self.active[slot] = True
+            self.uid[slot] = req.uid
+            self.budget[slot] = req.max_new_tokens
+            self.outputs[req.uid] = []
+
+    def step(self) -> List[Completion]:
+        """One engine iteration: admit, decode one token for all active slots."""
+        self._admit()
+        if not self.active.any():
+            return []
+        logits, self.cache = self._step(self.params, self.tokens, self.cache,
+                                        jnp.int32(self.clock))
+        self.clock += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)).astype(np.int32)
+        done: List[Completion] = []
+        new_tokens = np.asarray(self.tokens).copy()
+        for slot in range(self.b):
+            if not self.active[slot]:
+                continue
+            tok = int(nxt[slot])
+            self.outputs[self.uid[slot]].append(tok)
+            self.budget[slot] -= 1
+            new_tokens[slot, 0] = tok
+            if self.budget[slot] <= 0 or self.clock >= self.max_seq - 1:
+                done.append(Completion(int(self.uid[slot]),
+                                       self.outputs.pop(int(self.uid[slot]))))
+                self.active[slot] = False
+        self.tokens = jnp.asarray(new_tokens)
+        return done
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Completion]:
+        out: List[Completion] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and not self.active.any():
+                break
+        return out

@@ -1,0 +1,8 @@
+from repro.train.train_step import (TrainConfig, TrainState, make_eval_step,
+                                    make_train_state, make_train_step)
+from repro.train.trainer import (FailureInjector, Trainer, TrainerConfig,
+                                 WorkerFailure)
+
+__all__ = ["TrainConfig", "TrainState", "make_eval_step", "make_train_state",
+           "make_train_step", "FailureInjector", "Trainer", "TrainerConfig",
+           "WorkerFailure"]

@@ -1,0 +1,59 @@
+"""Train-step factories per model family (loss → grad → AdamW update).
+
+The returned ``train_step(state, batch) -> (state, metrics)`` is what the
+dry-run lowers and the Trainer drives. ``TrainState`` is a plain pytree so it
+checkpoints/shards transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (AdamWConfig, AdamWState, apply_updates, global_norm,
+                         init_state, warmup_cosine)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def make_train_state(params: Any, tcfg: TrainConfig) -> TrainState:
+    return TrainState(params=params, opt=init_state(params, tcfg.optimizer))
+
+
+def make_train_step(loss_fn: Callable[[Any, Dict[str, jax.Array]], jax.Array],
+                    tcfg: TrainConfig,
+                    donate: bool = True) -> Callable:
+    """loss_fn(params, batch) -> scalar; returns jit-able train_step."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        lr_scale = warmup_cosine(state.opt.step, tcfg.warmup_steps,
+                                 tcfg.total_steps)
+        new_params, new_opt = apply_updates(state.params, grads, state.opt,
+                                            tcfg.optimizer, lr_scale)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": global_norm(grads),
+                   "lr_scale": lr_scale}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(loss_fn: Callable) -> Callable:
+    def eval_step(state: TrainState, batch) -> jax.Array:
+        return loss_fn(state.params, batch)
+    return eval_step

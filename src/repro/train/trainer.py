@@ -1,0 +1,112 @@
+"""Training driver with checkpoint/restart fault tolerance.
+
+Production behaviours demonstrated at laptop scale:
+  * periodic async checkpointing (atomic; partial writes never restored)
+  * automatic restore-on-start (resume from the latest complete step)
+  * injected-failure recovery: a ``FailureInjector`` raises ``WorkerFailure``
+    mid-run; the Trainer restores the last checkpoint and replays the data
+    stream deterministically (data batches are pure functions of step)
+  * straggler mitigation hook: per-step wall-time EMA; steps slower than
+    ``straggler_factor``× the EMA are counted and surfaced in metrics — on a
+    real pod this signal feeds the elastic rescaler (runtime/elastic.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.train.train_step import TrainState
+
+
+class WorkerFailure(RuntimeError):
+    """Simulated node failure."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically fail at the given steps (once each)."""
+
+    fail_at: tuple = ()
+
+    def __post_init__(self):
+        self._fired = set()
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise WorkerFailure(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    max_restarts: int = 5
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, train_step: Callable,
+                 batch_at: Callable[[int], Dict[str, jax.Array]],
+                 injector: Optional[FailureInjector] = None):
+        self.cfg = cfg
+        self.train_step = jax.jit(train_step)
+        self.batch_at = batch_at
+        self.injector = injector
+        self.ckpt = Checkpointer(cfg.checkpoint_dir, keep_last=cfg.keep_last)
+        self.metrics_log: List[Dict[str, float]] = []
+        self.restarts = 0
+        self.straggler_steps = 0
+
+    def run(self, state: TrainState, start_step: int = 0) -> TrainState:
+        # resume if checkpoints exist
+        latest = self.ckpt.latest_step()
+        if latest is not None and latest > start_step:
+            state, start_step = self.ckpt.restore(state)
+        elif latest is None:
+            # checkpoint the initial state so failure-before-first-checkpoint
+            # restores cleanly instead of restarting on in-memory state
+            self.ckpt.save(start_step, state)
+        step = start_step
+        ema = None
+        while step < self.cfg.total_steps:
+            try:
+                t0 = time.perf_counter()
+                if self.injector is not None:
+                    self.injector.check(step)
+                batch = self.batch_at(step)
+                state, metrics = self.train_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                if dt > self.cfg.straggler_factor * ema:
+                    self.straggler_steps += 1
+                step += 1
+                if step % self.cfg.log_every == 0 or step == self.cfg.total_steps:
+                    self.metrics_log.append(
+                        {"step": step, "loss": float(metrics["loss"]),
+                         "grad_norm": float(metrics["grad_norm"]),
+                         "sec_per_step": dt})
+                if step % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(step, state)
+            except WorkerFailure:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    step = start_step           # restart from scratch
+                else:
+                    state, step = self.ckpt.restore(state)
+        self.ckpt.wait()
+        self.ckpt.save(self.cfg.total_steps, state)
+        self.ckpt.wait()
+        return state

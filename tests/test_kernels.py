@@ -1,0 +1,105 @@
+"""Pallas kernel correctness sweeps (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import generators
+from repro.graph.bsr import graph_to_bsr
+from repro.kernels import ref
+from repro.kernels.bsr_spmm import bsr_spmm, max_tiles_per_row
+from repro.kernels.embedding_bag import embedding_bag_sum
+from repro.kernels.flash_attention import flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,h,kv,sq,sk,d", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 8, 1, 256, 256, 64),      # MQA
+    (2, 4, 4, 128, 256, 32),      # cross lengths (non-causal only)
+    (1, 2, 2, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(b, h, kv, sq, sk, d, dtype):
+    causal = sq == sk
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=64, interpret=True)
+    exp = ref.ref_flash_attention(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window,cap", [(0, None), (64, None), (0, 30.0),
+                                        (32, 50.0)])
+def test_flash_attention_window_softcap(window, cap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    out = flash_attention(q, k, v, causal=True, window=window, softcap=cap,
+                          bq=64, bk=64, interpret=True)
+    exp = ref.ref_flash_attention(q, k, v, causal=True, window=window,
+                                  softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+@pytest.mark.parametrize("graph,blk,d", [
+    ("fem", 64, 16), ("fem", 128, 8), ("plc", 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_spmm_sweep(graph, blk, d, dtype):
+    g = generators.fem_cube(8) if graph == "fem" else generators.power_law(
+        500, seed=1)
+    bsr = graph_to_bsr(g, blk=blk)
+    x = jax.random.normal(KEY, (bsr.n_blocks * blk, d), dtype)
+    mpr = max_tiles_per_row(np.asarray(bsr.row_ptr))
+    out = bsr_spmm(bsr.blocks.astype(dtype), bsr.block_cols, bsr.row_ptr, x,
+                   max_per_row=mpr, interpret=True)
+    exp = ref.ref_bsr_spmm(bsr.blocks.astype(dtype), bsr.block_cols,
+                           bsr.row_ptr, x)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def test_bsr_spmm_normalized():
+    g = generators.fem_cube(6)
+    bsr = graph_to_bsr(g, blk=32, normalize="sym")
+    x = jax.random.normal(KEY, (bsr.n_blocks * 32, 4))
+    mpr = max_tiles_per_row(np.asarray(bsr.row_ptr))
+    out = bsr_spmm(bsr.blocks, bsr.block_cols, bsr.row_ptr, x,
+                   max_per_row=mpr, interpret=True)
+    exp = ref.ref_bsr_spmm(bsr.blocks, bsr.block_cols, bsr.row_ptr, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+@pytest.mark.parametrize("v,d,b,h", [(100, 16, 4, 3), (500, 64, 8, 6),
+                                     (64, 128, 2, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(v, d, b, h, dtype):
+    table = jax.random.normal(KEY, (v, d), dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (b, h), -1, v).astype(jnp.int32)
+    out = embedding_bag_sum(table, idx, interpret=True)
+    exp = ref.ref_embedding_bag(table, idx, "sum")
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def test_partition_counts_kernel_matches_core():
+    from repro.core import initial_partition
+    from repro.core.migration import neighbour_partition_counts
+    from repro.kernels import ops
+    g = generators.fem_cube(8)
+    bsr = graph_to_bsr(g, blk=64)
+    lab = initial_partition(g, 9, "hsh")
+    counts_core = neighbour_partition_counts(g, lab, 9)
+    counts_kern = ops.partition_counts(bsr, lab, 9)
+    n = int(g.num_nodes)
+    np.testing.assert_allclose(np.asarray(counts_core[:n], np.float32),
+                               np.asarray(counts_kern[:n]), atol=1e-5)

@@ -1,0 +1,144 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import initial_partition, make_state, migrate_step, occupancy
+from repro.graph import apply_delta, cut_ratio, from_edges, generators
+from repro.graph.structure import GraphDelta
+from repro.optim.optimizer import _dequantize, _quantize
+
+
+# ---------------------------------------------------------------------------
+# partitioning invariants
+# ---------------------------------------------------------------------------
+
+graphs = st.tuples(st.integers(20, 120), st.integers(0, 4))
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs, st.integers(2, 12), st.sampled_from(["hsh", "rnd", "blk"]))
+def test_assignment_stays_in_range_and_balanced(gparams, k, strat):
+    """Quotas guarantee occupancy never grows past max(initial, capacity):
+    the heuristic cannot *evict* an initial overflow (hash partitioning on
+    tiny graphs can start above capacity — found by hypothesis) but must
+    never create or worsen one."""
+    n, seed = gparams
+    g = generators.power_law(n, seed=seed)
+    state = make_state(g, initial_partition(g, k, strat), k, slack=0.2)
+    cap = int(np.asarray(state.capacity)[0])
+    occ0 = int(np.asarray(occupancy(state, g.node_mask)).max())
+    bound = max(cap, occ0)
+    for _ in range(6):
+        state, _ = migrate_step(state, g, s=0.5)
+        a = np.asarray(state.assignment)
+        assert ((a >= 0) & (a < k)).all()
+        occ = np.asarray(occupancy(state, g.node_mask))
+        assert occ.max() <= bound
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(3, 8), st.integers(0, 3))
+def test_cut_ratio_bounds(side, seed):
+    g = generators.fem_cube(side)
+    for k in (2, 5):
+        lab = initial_partition(g, k, "rnd", seed=seed)
+        c = float(cut_ratio(g, lab))
+        assert 0.0 <= c <= 1.0
+
+
+def test_apply_delta_never_clobbers_live_edges():
+    """Regression: additions must fill FREE slots only (a rank/slot indexing
+    bug once overwrote the first n_add live edges — caught via Fig. 7's
+    impossible static-time drop)."""
+    g = generators.fem_cube(6, n_cap=250, e_cap=700)
+    before = set(zip(np.asarray(g.src)[np.asarray(g.edge_mask)].tolist(),
+                     np.asarray(g.dst)[np.asarray(g.edge_mask)].tolist()))
+    delta = generators.forest_fire_delta(g, 0.10, seed=1)
+    g2 = apply_delta(g, delta)
+    after = set(zip(np.asarray(g2.src)[np.asarray(g2.edge_mask)].tolist(),
+                    np.asarray(g2.dst)[np.asarray(g2.edge_mask)].tolist()))
+    assert before <= after                       # every old edge survives
+    assert len(after) > len(before)              # and new ones landed
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(24, 80), st.integers(0, 3), st.integers(1, 10))
+def test_apply_delta_preserves_masks(n, seed, n_add):
+    g = generators.power_law(n, seed=seed, n_cap=n + 16,
+                             e_cap=int(4 * n * np.log(n)))
+    rng = np.random.default_rng(seed)
+    a_cap = 8
+    src = np.full(a_cap, -1, np.int32)
+    dst = np.full(a_cap, -1, np.int32)
+    mask = np.zeros(a_cap, bool)
+    for i in range(min(n_add, a_cap)):
+        src[i] = n + rng.integers(0, 8)     # new node
+        dst[i] = rng.integers(0, n)
+        mask[i] = src[i] != dst[i]
+    delta = GraphDelta(add_src=jnp.asarray(src), add_dst=jnp.asarray(dst),
+                       add_mask=jnp.asarray(mask),
+                       del_nodes=jnp.full((1,), -1, jnp.int32),
+                       del_mask=jnp.zeros((1,), bool))
+    n0 = int(g.num_nodes)
+    e0 = int(g.num_edges)
+    g2 = apply_delta(g, delta)
+    # masks consistent: every live edge has live endpoints
+    src2, dst2 = np.asarray(g2.src), np.asarray(g2.dst)
+    em = np.asarray(g2.edge_mask)
+    nm = np.asarray(g2.node_mask)
+    assert nm[src2[em]].all() and nm[dst2[em]].all()
+    assert int(g2.num_edges) >= e0
+    assert int(g2.num_nodes) >= n0
+
+
+# ---------------------------------------------------------------------------
+# quantizer invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 300), st.integers(0, 5))
+def test_quantize_roundtrip_lin(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) *
+                    rng.uniform(0.01, 100))
+    t = _quantize(x, "lin")
+    y = _dequantize(t)
+    assert y.shape == x.shape
+    scale = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert (err <= scale / 127.0 * 1.01 + 1e-9).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 300), st.integers(0, 5))
+def test_quantize_roundtrip_log(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=(rows, cols)) ** 2).astype(np.float32))
+    t = _quantize(x, "log")
+    y = np.asarray(_dequantize(t))
+    assert (y >= 0).all()
+    # log-space: relative error bounded by the per-row log-range step
+    xs = np.asarray(x)
+    big = xs > 1e-12
+    rel = np.abs(y[big] - xs[big]) / xs[big]
+    assert rel.max() < 0.35, rel.max()
+
+
+# ---------------------------------------------------------------------------
+# attention reference invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 4))
+def test_attention_probs_rowsum(seed):
+    from repro.kernels.ref import ref_flash_attention
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16))
+    k = jax.random.normal(ks[1], (1, 2, 32, 16))
+    # v = ones → output rows must be exactly 1 (softmax rows sum to 1)
+    v = jnp.ones((1, 2, 32, 16))
+    out = ref_flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
