@@ -1,0 +1,50 @@
+"""Version-compat shims over moving JAX APIs.
+
+The repo targets the newest public API surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``) but must run on whatever JAX the
+container bakes in. Everything that touches these APIs goes through here so
+a version bump is a one-file change.
+
+* ``make_mesh(shape, axes)`` — ``jax.sharding.AxisType`` appeared after
+  0.4.x; older JAX builds the same (fully ``Auto``) mesh without the kwarg.
+* ``shard_map(...)`` — ``jax.shard_map`` graduated from
+  ``jax.experimental.shard_map``; the experimental one additionally needs
+  ``check_rep=False`` for programs that thread PRNG keys through collectives.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _NEEDS_CHECK_REP = False
+else:  # pre-graduation JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEEDS_CHECK_REP = True
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Uniform shard_map entry point across JAX versions."""
+    if _NEEDS_CHECK_REP:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` fallback: psum of a unit is folded statically."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

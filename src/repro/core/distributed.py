@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size, shard_map
 from repro.graph.structure import Graph
 
 
@@ -212,7 +213,7 @@ def make_distributed_aggregate(mesh: jax.sharding.Mesh, dg: DistGraph):
 
     @jax.jit
     def agg_fn(features: jax.Array) -> jax.Array:
-        f = jax.shard_map(
+        f = shard_map(
             lambda lf, dgl: superstep_shard(lf, dgl, halo),
             mesh=mesh,
             in_specs=(jax.sharding.PartitionSpec(AXIS, None), dg_specs),
@@ -277,7 +278,7 @@ def migrate_step_shard(assignment_blk: jax.Array, pending_blk: jax.Array,
     # deferred physical relocation a partition's vertices can span several
     # storage blocks, so the per-block quota must bound the TOTAL influx:
     # free // P guarantees sum over blocks ≤ free for any label placement.
-    n_blocks = jax.lax.axis_size(AXIS)
+    n_blocks = axis_size(AXIS)
     quota = free // jnp.maximum(n_blocks, 1)
     # QUOTA: local ranking of this block's movers per destination
     tgt_safe = jnp.clip(target, 0, k - 1)
@@ -306,7 +307,7 @@ def make_distributed_migrator(mesh: jax.sharding.Mesh, dg: DistGraph, k: int,
     @jax.jit
     def step(assignment: jax.Array, pending: jax.Array, rng: jax.Array,
              capacity: jax.Array):
-        f = jax.shard_map(
+        f = shard_map(
             partial(migrate_step_shard, k=k, halo_size=halo, s=s),
             mesh=mesh,
             in_specs=(spec_n, spec_n, jax.sharding.PartitionSpec(), dg_specs,

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.core.distributed import AXIS, DistGraph, _halo_exchange
 from repro.models.gnn import GINConfig, _layernorm, _linear, _mlp2
 
@@ -110,8 +111,8 @@ def gin_halo_forward(params: Params, dg: DistGraph, feats: jax.Array,
             h = step(lp, h)
         return _mlp2(params["decode"], h)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(spec_n, dg_specs),
-                         out_specs=spec_n)(feats, dg)
+    return shard_map(body, mesh=mesh, in_specs=(spec_n, dg_specs),
+                     out_specs=spec_n)(feats, dg)
 
 
 def gin_halo_loss(params: Params, dg: DistGraph, feats: jax.Array,

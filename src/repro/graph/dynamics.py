@@ -1,64 +1,39 @@
-"""Dynamic-graph machinery: change queue + sliding-window streams (paper §4.1, §5.3).
+"""Dynamic-graph compat layer (paper §4.1, §5.3) over ``repro.stream``.
 
-``ChangeQueue`` buffers external topology mutations and releases them as
-padded ``GraphDelta`` batches between supersteps — the paper's external API
-("topology change requests are added to a change queue, and are processed at
-the end of every iteration, or potentially after n iterations").
+``ChangeQueue`` and ``SlidingWindowGraph`` keep the seed API — external
+topology mutations buffered between supersteps, CDR-style windowed replay —
+but are now thin wrappers over the vectorized streaming layer in
+``repro/stream/ingest.py`` (the per-event Python loops are gone; a drain is
+array slicing, window expiry is a scatter-max plus one masked scan).
 
-``SlidingWindowGraph`` replays a timestamped interaction stream (the CDR use
-case): new events add edges; edges idle longer than the window are removed,
-with their endpoints when orphaned.
+New code should use ``repro.stream.StreamEngine`` directly: it adds online
+placement of arriving vertices, incremental cut tracking, and backpressure
+accounting on top of this ingestion path.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-from typing import Deque, Iterator, List, Optional, Tuple
-
 import numpy as np
-import jax.numpy as jnp
 
 from repro.graph.structure import Graph, GraphDelta, apply_delta
+from repro.stream.ingest import (EdgeStreamBuffer, WindowIngestor,
+                                 stream_batches)
+
+__all__ = ["ChangeQueue", "SlidingWindowGraph", "stream_batches"]
 
 
-class ChangeQueue:
-    """Host-side buffer of pending topology changes with priorities."""
-
-    def __init__(self, a_cap: int = 4096, d_cap: int = 1024):
-        self.a_cap = a_cap
-        self.d_cap = d_cap
-        self._adds: Deque[Tuple[int, int]] = deque()
-        self._dels: Deque[int] = deque()
+class ChangeQueue(EdgeStreamBuffer):
+    """Host-side buffer of pending topology changes (seed-compatible API)."""
 
     def add_edge(self, u: int, v: int) -> None:
-        self._adds.append((u, v))
+        self.push_edges(np.asarray([u]), np.asarray([v]))
 
     def remove_node(self, v: int) -> None:
-        self._dels.append(v)
-
-    def __len__(self) -> int:
-        return len(self._adds) + len(self._dels)
+        self.push_node_removals(np.asarray([v]))
 
     def drain(self) -> GraphDelta:
         """Pop up to capacity changes into one padded GraphDelta."""
-        a = min(len(self._adds), self.a_cap)
-        d = min(len(self._dels), self.d_cap)
-        add_src = np.full((self.a_cap,), -1, np.int32)
-        add_dst = np.full((self.a_cap,), -1, np.int32)
-        add_mask = np.zeros((self.a_cap,), bool)
-        for i in range(a):
-            u, v = self._adds.popleft()
-            add_src[i], add_dst[i] = u, v
-            add_mask[i] = True
-        del_nodes = np.full((self.d_cap,), -1, np.int32)
-        del_mask = np.zeros((self.d_cap,), bool)
-        for i in range(d):
-            del_nodes[i] = self._dels.popleft()
-            del_mask[i] = True
-        return GraphDelta(add_src=jnp.asarray(add_src), add_dst=jnp.asarray(add_dst),
-                          add_mask=jnp.asarray(add_mask),
-                          del_nodes=jnp.asarray(del_nodes),
-                          del_mask=jnp.asarray(del_mask))
+        delta, _ = EdgeStreamBuffer.drain(self)
+        return delta
 
 
 class SlidingWindowGraph:
@@ -66,7 +41,8 @@ class SlidingWindowGraph:
 
     Mirrors the paper's mobile-network use case: "new calls add nodes and
     [edges] ... both are removed from the graph if they are inactive for more
-    than the window length".
+    than the window length". ``carry_backlog=False`` matches the seed
+    semantics (per-batch overflow beyond the caps is dropped).
     """
 
     def __init__(self, graph: Graph, window: int, a_cap: int = 8192,
@@ -75,34 +51,19 @@ class SlidingWindowGraph:
         self.window = window
         self.a_cap = a_cap
         self.d_cap = d_cap
-        self.last_seen: dict = {}            # node -> last active time
+        self._ingestor = WindowIngestor(n_cap=graph.n_cap, window=window,
+                                        a_cap=a_cap, d_cap=d_cap,
+                                        carry_backlog=False)
+
+    @property
+    def last_seen(self) -> dict:
+        """Seed-compatible view of the tracker: {node: last active time}."""
+        ls = self._ingestor.tracker.last_seen
+        live = ls != self._ingestor.tracker.NEVER
+        return {int(n): int(ls[n]) for n in np.flatnonzero(live)}
 
     def advance(self, events: np.ndarray, now: int) -> Graph:
         """Apply a batch of events (rows: t,u,v) and expire stale nodes."""
-        queue = ChangeQueue(self.a_cap, self.d_cap)
-        for t, u, v in events:
-            queue.add_edge(int(u), int(v))
-            self.last_seen[int(u)] = int(t)
-            self.last_seen[int(v)] = int(t)
-        horizon = now - self.window
-        stale = [n for n, t in self.last_seen.items() if t < horizon]
-        for n in stale:
-            queue.remove_node(n)
-            del self.last_seen[n]
-        self.graph = apply_delta(self.graph, queue.drain())
+        delta, _ = self._ingestor.ingest(np.asarray(events), now)
+        self.graph = apply_delta(self.graph, delta)
         return self.graph
-
-
-def stream_batches(times: np.ndarray, src: np.ndarray, dst: np.ndarray,
-                   batch_span: int) -> Iterator[Tuple[int, np.ndarray]]:
-    """Group a timestamped stream into time-span batches (speed-up factor
-    is modelled by choosing a larger span per superstep)."""
-    t0 = int(times.min()) if times.size else 0
-    t_end = int(times.max()) if times.size else 0
-    lo = t0
-    while lo <= t_end:
-        hi = lo + batch_span
-        sel = (times >= lo) & (times < hi)
-        rows = np.stack([times[sel], src[sel], dst[sel]], axis=1)
-        yield hi, rows
-        lo = hi

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size, shard_map
 from repro.runtime.sharding import constrain
 
 Params = Dict[str, Any]
@@ -146,7 +147,7 @@ def _local_dispatch_ffn(w_gate, w_up, w_down, router, x_loc, cfg: MoEConfig,
     """
     t_loc, d = x_loc.shape
     e = cfg.n_experts
-    m = jax.lax.axis_size(model_axis)
+    m = axis_size(model_axis)
     e_loc = e // m
     cap = max(1, int(math.ceil(t_loc * cfg.top_k * cfg.capacity_factor / e)))
 
@@ -228,7 +229,7 @@ def _moe_shard_map(params: Params, x: jax.Array, cfg: MoEConfig,
                                      all_axes=all_axes)
         return y.reshape(bb, ss, dd), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P("model", None, fsdp), P("model", None, fsdp),
                   P("model", fsdp, None), P(dp, "model", None)),

@@ -1,0 +1,19 @@
+"""Streaming ingestion engine: vectorized ingest → online placement →
+interleaved adaptation → incremental quality metrics (ROADMAP: serve heavy
+dynamic-graph traffic as fast as the hardware allows)."""
+from repro.stream.ingest import (EdgeStreamBuffer, IngestStats, WindowIngestor,
+                                 WindowTracker, build_delta, stream_batches)
+from repro.stream.placement import PlacementStats, place_delta
+from repro.stream.metrics import (DeltaStats, QualityTracker, cut_ratio_of,
+                                  delta_update, drift_check, imbalance_of,
+                                  init_tracker, move_update)
+from repro.stream.engine import StreamConfig, StreamEngine, SuperstepRecord
+
+__all__ = [
+    "EdgeStreamBuffer", "IngestStats", "WindowIngestor", "WindowTracker",
+    "build_delta", "stream_batches",
+    "PlacementStats", "place_delta",
+    "DeltaStats", "QualityTracker", "cut_ratio_of", "delta_update",
+    "drift_check", "imbalance_of", "init_tracker", "move_update",
+    "StreamConfig", "StreamEngine", "SuperstepRecord",
+]

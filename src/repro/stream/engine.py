@@ -1,0 +1,206 @@
+"""StreamEngine: the ingest → place → adapt → measure production loop.
+
+One object owns the full dynamic-graph serving path:
+
+    events ──► WindowIngestor (vectorized batch + expiry, backpressure)
+                   │ GraphDelta
+                   ▼
+               apply_delta (static-shape scatter, jit)
+                   │
+                   ▼
+               place_delta (online Fennel/DGR placement of arrivals, jit)
+                   │
+                   ▼
+               adapt_jit  (xDGP migration rounds, lax.scan, jit)
+                   │
+                   ▼
+               QualityTracker (incremental cut / occupancy, drift-checked)
+
+Each superstep emits one ``SuperstepRecord`` of telemetry — ingest rate,
+backlog, cut trajectory, imbalance, migrations, placement quality — which is
+what the throughput benchmark and the ops dashboard consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition_state import PartitionState, default_capacity, make_state
+from repro.core.initial import initial_partition
+from repro.core.repartitioner import adapt_jit
+from repro.graph.structure import Graph, apply_delta
+from repro.stream.ingest import IngestStats, WindowIngestor, stream_batches
+from repro.stream.metrics import (QualityTracker, cut_ratio_of, delta_update,
+                                  drift_check, imbalance_of, init_tracker,
+                                  move_update)
+from repro.stream.placement import place_delta
+
+
+@dataclasses.dataclass
+class StreamConfig:
+    k: int = 8                     # partitions
+    s: float = 0.5                 # migration damping (paper §3.4)
+    adapt_iters: int = 5           # migration rounds interleaved per superstep
+    tie_break: str = "random"
+    window: int = 300              # sliding-window length (event time units)
+    a_cap: int = 8192              # max edge additions per superstep
+    d_cap: int = 4096              # max node expiries per superstep
+    slack: float = 0.2             # capacity head-room over n_cap/k
+    placement: str = "online"      # "online" | "hash" (inherit padded-slot hash)
+    placement_passes: int = 2
+    recompute_every: int = 10      # supersteps between full-recompute drift checks
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SuperstepRecord:
+    """Telemetry for one engine superstep."""
+
+    superstep: int
+    now: int                   # stream time at the end of the batch
+    events: int                # events offered this superstep
+    adds: int                  # edge additions released into the graph
+    dels: int                  # node expiries released
+    backlog_adds: int          # additions held back by a_cap backpressure
+    backlog_dels: int
+    invalid_events: int        # events rejected at ingest (ids out of range)
+    stale_dropped: int         # backlogged changes invalidated by window movement
+    new_placed: int            # vertices placed online this superstep
+    migrations: int            # vertices moved by the adaptation rounds
+    cut_edges: int
+    live_edges: int
+    cut_ratio: float
+    imbalance: float
+    ingest_seconds: float      # delta construction (the streaming front end)
+    step_seconds: float        # full superstep wall clock
+    drift: Optional[float]     # set on drift-check supersteps (must be 0.0)
+
+    @property
+    def events_per_second(self) -> float:
+        return self.events / max(self.ingest_seconds, 1e-12)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["events_per_second"] = self.events_per_second
+        return d
+
+
+class StreamEngine:
+    """Continuous dynamic-graph partitioning over an event stream."""
+
+    def __init__(self, graph: Graph, config: StreamConfig,
+                 assignment: Optional[jax.Array] = None):
+        self.config = config
+        self.graph = graph
+        if assignment is None:
+            assignment = initial_partition(graph, config.k, "hsh")
+        # capacity is provisioned for the slot space, not the current live
+        # set: a stream can legally grow the graph to n_cap vertices.
+        capacity = default_capacity(graph.n_cap, config.k, config.slack)
+        self.state: PartitionState = make_state(
+            graph, assignment, config.k, slack=config.slack,
+            seed=config.seed, capacity=capacity)
+        self.ingestor = WindowIngestor(
+            n_cap=graph.n_cap, window=config.window,
+            a_cap=config.a_cap, d_cap=config.d_cap)
+        self.tracker: QualityTracker = init_tracker(graph, self.state.assignment,
+                                                    config.k)
+        self.telemetry: List[SuperstepRecord] = []
+        self._superstep = 0
+        self._place_key = jax.random.PRNGKey(config.seed ^ 0x5EED)
+        cfg = config
+        self._adapt = jax.jit(lambda g, st: adapt_jit(
+            g, st, s=cfg.s, iters=cfg.adapt_iters, tie_break=cfg.tie_break))
+
+    # -- one superstep ------------------------------------------------------
+    def superstep(self, events: np.ndarray, now: int) -> SuperstepRecord:
+        cfg = self.config
+        t_start = time.perf_counter()
+
+        # 1. INGEST: vectorized batch → one padded GraphDelta
+        delta, istats = self.ingestor.ingest(events, now)
+        t_ingest = time.perf_counter() - t_start
+
+        # 2. APPLY + PLACE: grow/shrink the graph, place arrivals online.
+        # A provably empty delta skips the device pipeline entirely (quiet
+        # stream gaps would otherwise pay full-graph scatters for no-ops).
+        before = self.graph
+        labels_before = self.state.assignment
+        if istats.adds_out == 0 and istats.dels_out == 0:
+            after = before
+            labels_placed = labels_before
+            new_placed = 0
+        else:
+            after = apply_delta(before, delta)
+            if cfg.placement == "online":
+                self._place_key, sub = jax.random.split(self._place_key)
+                labels_placed, pstats = place_delta(
+                    delta, before.node_mask, labels_before,
+                    self.tracker.occupancy, self.state.capacity, sub,
+                    k=cfg.k, passes=cfg.placement_passes)
+                new_placed = int(pstats.placed)
+            else:
+                labels_placed = labels_before
+                new_placed = int(jnp.sum(~before.node_mask & after.node_mask))
+
+            # 3. MEASURE the ingest: incremental cut/occupancy from diffs only
+            self.tracker, _ = delta_update(self.tracker, before, after,
+                                           labels_before, labels_placed)
+
+        # 4. ADAPT: interleaved xDGP migration rounds on the new graph
+        state = dataclasses.replace(self.state, assignment=labels_placed)
+        state = self._adapt(after, state)
+        self.tracker, moved = move_update(self.tracker, after,
+                                          labels_placed, state.assignment)
+
+        self.graph = after
+        self.state = state
+        self._superstep += 1
+
+        # 5. DRIFT CHECK: periodic full recompute validates the tracker
+        drift = None
+        if cfg.recompute_every and self._superstep % cfg.recompute_every == 0:
+            self.tracker, drift = drift_check(self.tracker, after, state.assignment)
+
+        record = SuperstepRecord(
+            superstep=self._superstep, now=int(now),
+            events=int(np.asarray(events).shape[0]) if np.asarray(events).size else 0,
+            adds=istats.adds_out, dels=istats.dels_out,
+            backlog_adds=istats.adds_backlog, backlog_dels=istats.dels_backlog,
+            invalid_events=istats.invalid, stale_dropped=istats.stale_dropped,
+            new_placed=new_placed, migrations=int(moved),
+            cut_edges=int(self.tracker.cut), live_edges=int(self.tracker.edges),
+            cut_ratio=float(cut_ratio_of(self.tracker)),
+            imbalance=float(imbalance_of(self.tracker)),
+            ingest_seconds=t_ingest,
+            step_seconds=time.perf_counter() - t_start,
+            drift=drift,
+        )
+        self.telemetry.append(record)
+        return record
+
+    # -- windowed replay of a whole stream ---------------------------------
+    def run_stream(self, times: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                   batch_span: int,
+                   max_supersteps: Optional[int] = None) -> List[SuperstepRecord]:
+        """Replay a (t, u, v) stream window-by-window through the engine."""
+        out: List[SuperstepRecord] = []
+        for now, events in stream_batches(times, src, dst, batch_span):
+            out.append(self.superstep(events, now))
+            if max_supersteps is not None and len(out) >= max_supersteps:
+                break
+        return out
+
+    def drain_backlog(self, now: int, max_supersteps: int = 64,
+                      ) -> List[SuperstepRecord]:
+        """Flush capacity-deferred changes with empty-input supersteps."""
+        out: List[SuperstepRecord] = []
+        empty = np.empty((0, 3), np.int64)
+        while len(self.ingestor.buffer) and len(out) < max_supersteps:
+            out.append(self.superstep(empty, now))
+        return out

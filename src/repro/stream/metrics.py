@@ -1,0 +1,157 @@
+"""Incremental partition-quality maintenance (streaming layer §3).
+
+The seed recomputed ``cut_ratio`` — a full scan plus the O(E·k) neighbour
+count — from scratch every superstep. Here the engine carries a
+``QualityTracker`` (cut edges, live edges, per-partition occupancy) and
+updates it from *diffs only*:
+
+* ``delta_update``  — after ``apply_delta`` + placement: added/removed cut
+  edges from the changed edge slots, occupancy from born/died vertices.
+* ``move_update``   — after an adaptation round: cut change restricted to
+  edges incident to moved vertices (moves × boundary-degree), occupancy from
+  the moved labels.
+
+Both updates are exact (integer arithmetic over masked diffs), so the
+tracker matches a full recompute bit-for-bit; ``drift_check`` verifies that
+periodically and resyncs, guarding against any future approximation.
+
+Invariant maintained throughout:
+    tracker.cut_edges  == cut_edges(graph, assignment)
+    tracker.live_edges == graph.num_edges
+    tracker.occupancy  == occupancy(assignment | node_mask)
+
+``delta_update`` relies on placement only relabelling vertices that were
+dead before the delta (surviving edges keep both endpoint labels, so their
+cut contribution cannot change); ``place_delta`` guarantees exactly that.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structure import Graph, cut_edges
+
+
+class QualityTracker(NamedTuple):
+    cut: jax.Array           # () int32 — live cut edges
+    edges: jax.Array         # () int32 — live edges
+    occupancy: jax.Array     # (k,) int32 — live vertices per partition
+
+
+class DeltaStats(NamedTuple):
+    added_cut: jax.Array     # cut edges introduced by the delta
+    removed_cut: jax.Array   # cut edges retired by the delta
+    born: jax.Array          # vertices that became live
+    died: jax.Array          # vertices that expired
+
+
+def _occ(assignment: jax.Array, node_mask: jax.Array, k: int) -> jax.Array:
+    seg = jnp.where(node_mask, assignment, k)
+    return jax.ops.segment_sum(jnp.ones_like(seg), seg, num_segments=k + 1)[:k]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def init_tracker(graph: Graph, assignment: jax.Array, k: int) -> QualityTracker:
+    """Full O(E) computation — used once at startup and at drift resyncs."""
+    return QualityTracker(
+        cut=cut_edges(graph, assignment).astype(jnp.int32),
+        edges=graph.num_edges.astype(jnp.int32),
+        occupancy=_occ(assignment.astype(jnp.int32), graph.node_mask, k),
+    )
+
+
+def _cross(src: jax.Array, dst: jax.Array, assignment: jax.Array) -> jax.Array:
+    n_cap = assignment.shape[0]
+    a = assignment[jnp.clip(src, 0, n_cap - 1)]
+    b = assignment[jnp.clip(dst, 0, n_cap - 1)]
+    return a != b
+
+
+@jax.jit
+def delta_update(tracker: QualityTracker, before: Graph, after: Graph,
+                 labels_before: jax.Array, labels_after: jax.Array,
+                 ) -> Tuple[QualityTracker, DeltaStats]:
+    """Fold one ingest superstep (apply_delta + placement) into the tracker.
+
+    ``labels_before`` is the assignment when ``before`` was current;
+    ``labels_after`` additionally carries the online placement of vertices
+    born in this delta. Edge slots are compared content-wise so slot reuse
+    (a retired slot refilled by a new edge in the same delta) is counted as
+    one removal plus one addition.
+    """
+    same = (before.src == after.src) & (before.dst == after.dst)
+    removed = before.edge_mask & (~after.edge_mask | ~same)
+    added = after.edge_mask & (~before.edge_mask | ~same)
+
+    removed_cut = jnp.sum(removed & _cross(before.src, before.dst, labels_before))
+    added_cut = jnp.sum(added & _cross(after.src, after.dst, labels_after))
+
+    born = ~before.node_mask & after.node_mask
+    died = before.node_mask & ~after.node_mask
+    k = tracker.occupancy.shape[0]
+    occ = (tracker.occupancy
+           + _occ(labels_after.astype(jnp.int32), born, k)
+           - _occ(labels_before.astype(jnp.int32), died, k))
+
+    new = QualityTracker(
+        cut=(tracker.cut + added_cut - removed_cut).astype(jnp.int32),
+        edges=(tracker.edges + jnp.sum(added) - jnp.sum(removed)).astype(jnp.int32),
+        occupancy=occ.astype(jnp.int32),
+    )
+    stats = DeltaStats(added_cut=added_cut.astype(jnp.int32),
+                       removed_cut=removed_cut.astype(jnp.int32),
+                       born=jnp.sum(born).astype(jnp.int32),
+                       died=jnp.sum(died).astype(jnp.int32))
+    return new, stats
+
+
+@jax.jit
+def move_update(tracker: QualityTracker, graph: Graph,
+                labels_before: jax.Array, labels_after: jax.Array,
+                ) -> Tuple[QualityTracker, jax.Array]:
+    """Fold an adaptation round into the tracker: O(moves × boundary degree).
+
+    The cut can only change on edges incident to a moved vertex, so the diff
+    is restricted to that boundary set.
+    """
+    n_cap = graph.n_cap
+    moved = (labels_before != labels_after) & graph.node_mask
+    touched = (moved[jnp.clip(graph.src, 0, n_cap - 1)]
+               | moved[jnp.clip(graph.dst, 0, n_cap - 1)]) & graph.edge_mask
+    before_cut = jnp.sum(touched & _cross(graph.src, graph.dst, labels_before))
+    after_cut = jnp.sum(touched & _cross(graph.src, graph.dst, labels_after))
+
+    k = tracker.occupancy.shape[0]
+    occ = (tracker.occupancy
+           + _occ(labels_after.astype(jnp.int32), moved, k)
+           - _occ(labels_before.astype(jnp.int32), moved, k))
+    new = QualityTracker(
+        cut=(tracker.cut + after_cut - before_cut).astype(jnp.int32),
+        edges=tracker.edges,
+        occupancy=occ.astype(jnp.int32),
+    )
+    return new, jnp.sum(moved).astype(jnp.int32)
+
+
+def cut_ratio_of(tracker: QualityTracker) -> jax.Array:
+    return tracker.cut / jnp.maximum(tracker.edges, 1)
+
+
+def imbalance_of(tracker: QualityTracker) -> jax.Array:
+    occ = tracker.occupancy
+    mean = jnp.maximum(jnp.sum(occ) / occ.shape[0], 1)
+    return jnp.max(occ) / mean
+
+
+def drift_check(tracker: QualityTracker, graph: Graph, assignment: jax.Array,
+                ) -> Tuple[QualityTracker, float]:
+    """Compare the tracker against a full recompute; resync and report drift."""
+    k = tracker.occupancy.shape[0]
+    fresh = init_tracker(graph, assignment, k)
+    drift = float(jnp.abs(tracker.cut - fresh.cut)
+                  + jnp.abs(tracker.edges - fresh.edges)
+                  + jnp.sum(jnp.abs(tracker.occupancy - fresh.occupancy)))
+    return fresh, drift

@@ -30,7 +30,8 @@ P = 8
 g = generators.fem_cube(10)
 lab = np.asarray(initial_partition(g, P, "hsh"))
 dg, _ = build_dist_graph(g, lab, P)
-mesh = jax.make_mesh((P,), ("nodes",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((P,), ("nodes",))
 mig = make_distributed_migrator(mesh, dg, P, s=0.5)
 assignment = jnp.repeat(jnp.arange(P, dtype=jnp.int32), dg.block_size)
 pending = jnp.full((P*dg.block_size,), -1, jnp.int32)
@@ -69,7 +70,8 @@ P = 8
 g = generators.power_law(300, seed=1)
 lab = np.asarray(initial_partition(g, P, "rnd"))
 dg, _ = build_dist_graph(g, lab, P)
-mesh = jax.make_mesh((P,), ("nodes",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((P,), ("nodes",))
 agg = make_distributed_aggregate(mesh, dg)
 f = jnp.ones((P*dg.block_size, 2))
 out = np.asarray(agg(f))
@@ -110,7 +112,8 @@ for p in range(P):
 feats_dist = np.zeros((P*dg.block_size, 4), np.float32)
 live = np.flatnonzero(node_mask)
 feats_dist[new_global[live]] = np.asarray(feats_orig)[live]
-mesh = jax.make_mesh((P,), ("nodes",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((P,), ("nodes",))
 out = np.asarray(jax.jit(lambda p, f: gin_halo_forward(p, dg, f, cfg, mesh))(params, jnp.asarray(feats_dist)))
 err = np.abs(ref[live] - out[new_global[live]]).max()
 assert err < 1e-4, err
@@ -123,7 +126,8 @@ def test_shard_map_moe_matches_einsum():
 import jax, jax.numpy as jnp, numpy as np, dataclasses
 from repro.models.moe import MoEConfig, moe_init, moe_apply
 from repro.runtime import sharding as shr
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 cfg_ref = MoEConfig(n_experts=8, top_k=2, d_ff=64, capacity_factor=16.0, dispatch="einsum")
 cfg_shd = dataclasses.replace(cfg_ref, dispatch="sharded")

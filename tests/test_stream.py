@@ -1,0 +1,295 @@
+"""Streaming ingestion engine tests: vectorized ingest equivalence with the
+seed per-event path, incremental cut tracking vs. full recompute, online
+placement quality, and capacity backpressure accounting."""
+import dataclasses
+from collections import deque
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph import generators
+from repro.graph.dynamics import ChangeQueue, SlidingWindowGraph
+from repro.graph.structure import Graph, GraphDelta, apply_delta, cut_edges, cut_ratio
+from repro.stream import (StreamConfig, StreamEngine, WindowIngestor,
+                          build_delta, place_delta, stream_batches)
+
+
+# --- reference implementation: the seed's per-event Python loops -----------
+
+class _SeedChangeQueue:
+    def __init__(self, a_cap=4096, d_cap=1024):
+        self.a_cap, self.d_cap = a_cap, d_cap
+        self._adds, self._dels = deque(), deque()
+
+    def add_edge(self, u, v):
+        self._adds.append((u, v))
+
+    def remove_node(self, v):
+        self._dels.append(v)
+
+    def drain(self):
+        a = min(len(self._adds), self.a_cap)
+        d = min(len(self._dels), self.d_cap)
+        add_src = np.full((self.a_cap,), -1, np.int32)
+        add_dst = np.full((self.a_cap,), -1, np.int32)
+        add_mask = np.zeros((self.a_cap,), bool)
+        for i in range(a):
+            u, v = self._adds.popleft()
+            add_src[i], add_dst[i] = u, v
+            add_mask[i] = True
+        del_nodes = np.full((self.d_cap,), -1, np.int32)
+        del_mask = np.zeros((self.d_cap,), bool)
+        for i in range(d):
+            del_nodes[i] = self._dels.popleft()
+            del_mask[i] = True
+        return GraphDelta(add_src=jnp.asarray(add_src), add_dst=jnp.asarray(add_dst),
+                          add_mask=jnp.asarray(add_mask),
+                          del_nodes=jnp.asarray(del_nodes),
+                          del_mask=jnp.asarray(del_mask))
+
+
+class _SeedSlidingWindow:
+    def __init__(self, graph, window, a_cap=8192, d_cap=4096):
+        self.graph, self.window = graph, window
+        self.a_cap, self.d_cap = a_cap, d_cap
+        self.last_seen = {}
+
+    def advance(self, events, now):
+        queue = _SeedChangeQueue(self.a_cap, self.d_cap)
+        for t, u, v in events:
+            queue.add_edge(int(u), int(v))
+            self.last_seen[int(u)] = int(t)
+            self.last_seen[int(v)] = int(t)
+        horizon = now - self.window
+        stale = [n for n, t in self.last_seen.items() if t < horizon]
+        for n in stale:
+            queue.remove_node(n)
+            del self.last_seen[n]
+        self.graph = apply_delta(self.graph, queue.drain())
+        return self.graph
+
+
+def _empty_graph(n_cap, e_cap):
+    return Graph(src=jnp.full((e_cap,), -1, jnp.int32),
+                 dst=jnp.full((e_cap,), -1, jnp.int32),
+                 node_mask=jnp.zeros((n_cap,), bool),
+                 edge_mask=jnp.zeros((e_cap,), bool))
+
+
+def _graphs_equal(a: Graph, b: Graph) -> bool:
+    return (np.array_equal(np.asarray(a.src), np.asarray(b.src))
+            and np.array_equal(np.asarray(a.dst), np.asarray(b.dst))
+            and np.array_equal(np.asarray(a.node_mask), np.asarray(b.node_mask))
+            and np.array_equal(np.asarray(a.edge_mask), np.asarray(b.edge_mask)))
+
+
+def test_sliding_window_matches_seed_loop():
+    """Vectorized windowed ingest reproduces the seed per-event path exactly."""
+    n, window = 400, 200
+    times, u, v = generators.sliding_window_stream(n, 4000, window, seed=3)
+    new = SlidingWindowGraph(_empty_graph(n, 6000), window, a_cap=2048, d_cap=2048)
+    old = _SeedSlidingWindow(_empty_graph(n, 6000), window, a_cap=2048, d_cap=2048)
+    for i, (now, events) in enumerate(stream_batches(times, u, v, window // 2)):
+        g_new = new.advance(events, now)
+        g_old = old.advance(events, now)
+        assert _graphs_equal(g_new, g_old), f"diverged at batch {i}"
+        assert new.last_seen == old.last_seen, f"window state diverged at batch {i}"
+
+
+def test_change_queue_drain_matches_seed():
+    """Vectorized drain: identical padded layout, FIFO order, leftovers kept."""
+    rng = np.random.default_rng(0)
+    new = ChangeQueue(a_cap=64, d_cap=16)
+    old = _SeedChangeQueue(a_cap=64, d_cap=16)
+    for _ in range(100):                      # oversubscribe both caps
+        a, b = int(rng.integers(0, 500)), int(rng.integers(0, 500))
+        new.add_edge(a, b)
+        old.add_edge(a, b)
+    for _ in range(40):
+        d = int(rng.integers(0, 500))
+        new.remove_node(d)
+        old.remove_node(d)
+    while len(new) or len(old._adds) or len(old._dels):
+        dn, do = new.drain(), old.drain()
+        for f in ("add_src", "add_dst", "add_mask", "del_nodes", "del_mask"):
+            assert np.array_equal(np.asarray(getattr(dn, f)),
+                                  np.asarray(getattr(do, f))), f
+    assert len(new) == 0
+
+
+def test_incremental_cut_matches_full_recompute_every_batch():
+    """QualityTracker drift must be exactly zero at every superstep."""
+    n, window = 500, 250
+    times, u, v = generators.sliding_window_stream(n, 5000, window, seed=11)
+    cfg = StreamConfig(k=5, window=window, adapt_iters=3, recompute_every=1,
+                       a_cap=2048, d_cap=2048, seed=1)
+    eng = StreamEngine(_empty_graph(n, 8000), cfg)
+    recs = eng.run_stream(times, u, v, window // 3)
+    assert len(recs) >= 10
+    for r in recs:
+        assert r.drift == 0.0, f"superstep {r.superstep}: drift {r.drift}"
+        assert abs(r.cut_edges - r.cut_ratio * max(r.live_edges, 1)) < 1e-3
+    # occupancy tracked incrementally must also match a direct count
+    occ = np.bincount(np.asarray(eng.state.assignment)[np.asarray(eng.graph.node_mask)],
+                      minlength=cfg.k)
+    assert np.array_equal(occ, np.asarray(eng.tracker.occupancy))
+
+
+def test_online_placement_beats_hash_on_community_arrivals():
+    """Arrivals with community structure: the streaming placer lands them
+    with their community; hash placement scatters them."""
+    rng = np.random.default_rng(5)
+    k, per, warm = 4, 120, 60             # 4 communities, 60 warm members each
+    n = k * per
+    # warm graph: intra-community edges among the first `warm` members
+    src, dst = [], []
+    for c in range(k):
+        base = c * per
+        for _ in range(warm * 4):
+            a, b = rng.integers(0, warm, 2)
+            if a != b:
+                src.append(base + a)
+                dst.append(base + b)
+    from repro.graph.structure import from_edges
+    g = from_edges(np.array(src), np.array(dst), n, n_cap=n, e_cap=len(src) + 4096)
+    # only the warm cores are live; cold members arrive via the delta
+    warm_mask = np.zeros((n,), bool)
+    for c in range(k):
+        warm_mask[c * per: c * per + warm] = True
+    g = dataclasses.replace(g, node_mask=jnp.asarray(warm_mask))
+    node_mask = warm_mask
+    # warm labels: community c -> partition c (ideal), padding slots hashed
+    from repro.core.initial import hash_partition
+    labels = np.asarray(hash_partition(g, k)).copy()
+    for c in range(k):
+        labels[c * per: c * per + warm] = c
+    labels = jnp.asarray(labels)
+    # arrivals: cold members wire into their own community's warm core
+    asrc, adst = [], []
+    for c in range(k):
+        base = c * per
+        for i in range(warm, per):
+            for _ in range(3):
+                asrc.append(base + i)
+                adst.append(base + int(rng.integers(0, warm)))
+    delta = build_delta(np.array(asrc), np.array(adst), np.empty(0, np.int64),
+                        a_cap=4096, d_cap=16)
+    g_after = apply_delta(g, delta)
+    occ = jnp.asarray(np.bincount(labels[node_mask], minlength=k))
+    cap = jnp.full((k,), int(n / k * 1.5) + 1, jnp.int32)
+    placed, stats = place_delta(delta, g.node_mask, labels, occ, cap,
+                                jax.random.PRNGKey(7), k=k, passes=2)
+    cut_online = float(cut_ratio(g_after, placed))
+    cut_hash = float(cut_ratio(g_after, labels))
+    assert int(stats.placed) == k * (per - warm)
+    assert cut_online < 0.5 * cut_hash, (cut_online, cut_hash)
+    assert cut_online < 0.05, cut_online          # arrivals land with their community
+
+
+def test_backpressure_accounting_and_drain():
+    """Overflow beyond a_cap stays queued, is reported, and drains later."""
+    n = 300
+    g = _empty_graph(n, 4000)
+    cfg = StreamConfig(k=3, window=10**9, adapt_iters=0, a_cap=128, d_cap=64,
+                       recompute_every=1)
+    eng = StreamEngine(g, cfg)
+    rng = np.random.default_rng(2)
+    ev = np.stack([np.arange(500), rng.integers(0, n, 500),
+                   rng.integers(0, n, 500)], axis=1)
+    r = eng.superstep(ev, now=500)
+    assert r.adds == 128 and r.backlog_adds == 500 - 128
+    drained = eng.drain_backlog(now=500)
+    assert drained[-1].backlog_adds == 0
+    assert sum(d.adds for d in drained) == 500 - 128
+    # incremental tracker stayed exact throughout the backlog flush
+    assert all(d.drift == 0.0 for d in drained)
+
+
+def test_placement_respects_capacity():
+    """Arrivals all attracted to one full partition must spill to free room
+    elsewhere instead of overfilling it."""
+    n, k, warm = 64, 4, 8
+    src = np.repeat(np.arange(warm), 2)
+    dst = np.roll(src, 1)
+    from repro.graph.structure import from_edges
+    g = from_edges(src, dst, n, n_cap=n, e_cap=512)
+    mask = np.zeros(n, bool)
+    mask[:warm] = True                        # only the magnet core is live
+    g = dataclasses.replace(g, node_mask=jnp.asarray(mask))
+    labels = jnp.zeros((n,), jnp.int32)       # core all in partition 0
+    # 24 arrivals, every one wired into partition 0's core
+    asrc = np.arange(warm, warm + 24)
+    adst = np.arange(24) % warm
+    delta = build_delta(asrc, adst, np.empty(0, np.int64), a_cap=64, d_cap=4)
+    occ = jnp.asarray(np.bincount(np.zeros(warm, np.int64), minlength=k))
+    cap = jnp.full((k,), 12, jnp.int32)       # partition 0 has room for 4 more
+    placed, stats = place_delta(delta, g.node_mask, labels, occ, cap,
+                                jax.random.PRNGKey(0), k=k, passes=2)
+    g_after = apply_delta(g, delta)
+    occ_after = np.bincount(np.asarray(placed)[np.asarray(g_after.node_mask)],
+                            minlength=k)
+    assert int(stats.placed) == 24
+    assert occ_after.max() <= 12, occ_after   # nothing exceeds capacity
+    assert occ_after.sum() == warm + 24
+
+
+def test_backlogged_changes_revalidated_against_window():
+    """An edge stuck in the backlog must not resurrect an expired node into
+    an untracked (never-expiring) state, and a queued deletion must not kill
+    a node that became active again while it waited."""
+    from repro.stream import WindowIngestor
+    ing = WindowIngestor(n_cap=50, window=10, a_cap=2, d_cap=64)
+    # t=0: three edges from node 0; a_cap=2 leaves (0,3)@t=0 backlogged
+    ev = np.array([[0, 0, 1], [0, 0, 2], [0, 0, 3]])
+    _, s = ing.ingest(ev, now=0)
+    assert s.adds_out == 2 and s.adds_backlog == 1
+    # t=25: window has moved past t=0; the backlogged edge is now stale and
+    # must be dropped, not applied with untracked endpoints
+    delta, s = ing.ingest(np.empty((0, 3)), now=25)
+    assert s.stale_dropped >= 1 and s.adds_out == 0
+    assert ing.tracker.tracked == 0           # nothing left tracked
+    # queued deletion for a node that comes back: expire node 7, then touch
+    # it again before the deletion would drain
+    ing2 = WindowIngestor(n_cap=50, window=10, a_cap=8, d_cap=0)  # d_cap=0: dels queue
+    ing2.ingest(np.array([[0, 7, 8]]), now=0)
+    _, s = ing2.ingest(np.empty((0, 3)), now=20)      # 7, 8 expire; dels backlogged
+    assert s.dels_backlog == 2
+    ing2.d_cap = ing2.buffer.d_cap = 64                # capacity restored
+    delta, s = ing2.ingest(np.array([[21, 7, 9]]), now=21)  # 7 is active again
+    dn = np.asarray(delta.del_nodes)[np.asarray(delta.del_mask)]
+    assert 7 not in dn and 8 in dn                     # stale del dropped for 7 only
+    assert s.stale_dropped == 1
+
+
+def test_stream_batches_rejects_nonpositive_span():
+    import pytest
+    with pytest.raises(ValueError):
+        next(stream_batches(np.arange(10), np.arange(10), np.arange(10), 0))
+
+
+def test_seed_mode_reports_overflow_as_dropped_not_backlog():
+    from repro.stream import WindowIngestor
+    ing = WindowIngestor(n_cap=50, window=100, a_cap=2, d_cap=8,
+                         carry_backlog=False)
+    ev = np.array([[0, 1, 2], [0, 3, 4], [0, 5, 6], [0, 7, 8]])
+    _, s = ing.ingest(ev, now=0)
+    assert s.adds_out == 2 and s.adds_backlog == 0 and s.overflow_dropped == 2
+    _, s = ing.ingest(np.empty((0, 3)), now=1)    # the overflow is truly gone
+    assert s.adds_out == 0
+
+
+def test_engine_matches_sliding_window_graph_topology():
+    """With placement/adaptation disabled, the engine's graph evolution equals
+    the compat SlidingWindowGraph's on the same stream (modulo backpressure,
+    which is off when caps exceed the batch size)."""
+    n, window = 300, 150
+    times, u, v = generators.sliding_window_stream(n, 3000, window, seed=9)
+    cfg = StreamConfig(k=4, window=window, adapt_iters=0, placement="hash",
+                       a_cap=4096, d_cap=4096, recompute_every=0)
+    eng = StreamEngine(_empty_graph(n, 6000), cfg)
+    swg = SlidingWindowGraph(_empty_graph(n, 6000), window, a_cap=4096, d_cap=4096)
+    for now, events in stream_batches(times, u, v, window // 2):
+        eng.superstep(events, now)
+        swg.advance(events, now)
+        assert _graphs_equal(eng.graph, swg.graph)
