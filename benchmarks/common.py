@@ -1,12 +1,15 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
+
+from repro.core.vertex_program import CostModel
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
 
@@ -28,18 +31,19 @@ def timed(fn, *args, repeats: int = 1, **kw):
     return out, dt
 
 
-class CommModel:
+class CommModel(CostModel):
     """Iteration-time model from the paper's observation that network
     messages dominate (>80% of iteration time, §5.3): t = c_cpu·msgs_local +
     c_net·msgs_remote, with c_net/c_cpu = 25 (≈ 10GbE RTT vs in-memory
     hand-off). Used where wall-clock would only reflect this CPU container.
+
+    Thin message-unit façade over ``repro.core.vertex_program.CostModel`` —
+    the single source of truth for the cost constants, shared with the
+    scenario suite.
     """
 
-    def __init__(self, c_cpu: float = 1.0, c_net: float = 25.0):
-        self.c_cpu = c_cpu
-        self.c_net = c_net
-
     def step_time(self, local_msgs: float, remote_msgs: float,
-                  migrations: float = 0.0, c_mig: float = 50.0) -> float:
-        return (self.c_cpu * local_msgs + self.c_net * remote_msgs
-                + c_mig * migrations)
+                  migrations: float = 0.0, c_mig: Optional[float] = None) -> float:
+        model = self if c_mig is None else dataclasses.replace(self, c_mig=c_mig)
+        return model.superstep_cost(local_msgs, remote_msgs, migrations,
+                                    unit_bytes=1.0)

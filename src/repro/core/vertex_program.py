@@ -75,6 +75,24 @@ def run(prog: VertexProgram, graph: Graph, num_steps: int,
     return state
 
 
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """The paper's execution-time model (§5.3): iteration time is bound by
+    messages, remote ≈ 25× local (10GbE RTT vs in-memory hand-off), one
+    migration ≈ 50 message units (state shipping + routing updates).
+    Single source of truth for the cost constants — the scenario harness
+    and ``benchmarks.common.CommModel`` both build on it."""
+
+    c_cpu: float = 1.0     # per local message byte
+    c_net: float = 25.0    # per remote message byte
+    c_mig: float = 50.0    # per migrated vertex, in message-byte units
+
+    def superstep_cost(self, local_bytes: float, remote_bytes: float,
+                       migrations: float, unit_bytes: float) -> float:
+        return (self.c_cpu * local_bytes + self.c_net * remote_bytes
+                + self.c_mig * migrations * unit_bytes)
+
+
 def message_volume(graph: Graph, assignment: jax.Array, state_dim: int,
                    bytes_per_elem: int = 4) -> Tuple[jax.Array, jax.Array]:
     """Per-superstep message traffic split into (local, cross-partition) bytes.
@@ -170,3 +188,14 @@ PROGRAMS = {
     "wcc": weakly_connected_components,
     "degree": degree_stats,
 }
+
+
+def make_program(name: str, **kwargs) -> VertexProgram:
+    """Instantiate a shipped program by name (scenario drivers carry string
+    keys so Scenario objects stay serialisable)."""
+    try:
+        factory = PROGRAMS[name]
+    except KeyError:
+        raise KeyError(f"unknown vertex program {name!r}; "
+                       f"available: {sorted(PROGRAMS)}") from None
+    return factory(**kwargs)

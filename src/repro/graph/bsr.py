@@ -66,9 +66,7 @@ def graph_to_bsr(graph: Graph, blk: int = 128, normalize: Optional[str] = None,
             raise ValueError(normalize)
     br, bc = rows // blk, cols // blk
     key = br * (n_pad // blk) + bc
-    order = np.argsort(key, kind="stable")
-    rows, cols, vals, br, bc, key = (a[order] for a in (rows, cols, vals, br, bc, key))
-    uniq, start = np.unique(key, return_index=True)
+    uniq, tile_of = np.unique(key, return_inverse=True)
     nnzb = uniq.shape[0]
     cap = int(nnzb_cap if nnzb_cap is not None else max(nnzb, 1))
     if cap < nnzb:
@@ -83,13 +81,10 @@ def graph_to_bsr(graph: Graph, blk: int = 128, normalize: Optional[str] = None,
     np.add.at(row_counts, tile_row, 1)
     row_ptr = np.zeros(n_blocks + 1, dtype=np.int32)
     np.cumsum(row_counts, out=row_ptr[1:])
-    # scatter entries into their tiles
-    bounds = np.append(start, rows.shape[0])
-    for t in range(nnzb):
-        lo, hi = bounds[t], bounds[t + 1]
-        r = (rows[lo:hi] % blk).astype(np.int64)
-        c = (cols[lo:hi] % blk).astype(np.int64)
-        np.add.at(blocks[t], (r, c), vals[lo:hi])
+    # scatter all entries into their tiles with one flattened accumulate:
+    # flat index = tile * blk² + (row within tile) * blk + (col within tile)
+    flat = tile_of * (blk * blk) + (rows % blk) * blk + (cols % blk)
+    np.add.at(blocks.reshape(-1), flat, vals)
     return BSRMatrix(blocks=jnp.asarray(blocks), block_cols=jnp.asarray(block_cols),
                      row_ptr=jnp.asarray(row_ptr), nnzb=jnp.asarray(nnzb, jnp.int32))
 
@@ -101,7 +96,8 @@ def bsr_density_stats(bsr: BSRMatrix) -> dict:
     rp = np.asarray(bsr.row_ptr)
     rows = np.repeat(np.arange(bsr.n_blocks), np.diff(rp))
     if nb == 0:
-        return {"nnzb": 0, "diag_frac": 1.0, "mean_band": 0.0}
+        return {"nnzb": 0, "diag_frac": 1.0, "mean_band": 0.0,
+                "tiles_per_row": 0.0}
     diag = float(np.mean(rows == cols[: rows.shape[0]]))
     band = float(np.mean(np.abs(rows - cols[: rows.shape[0]])))
     return {"nnzb": nb, "diag_frac": diag, "mean_band": band,

@@ -53,6 +53,35 @@ def fem_grid2d(side: int, n_cap: Optional[int] = None, e_cap: Optional[int] = No
     return from_edges(np.concatenate(srcs), np.concatenate(dsts), n, n_cap=n_cap, e_cap=e_cap)
 
 
+def cell_grid(rows: int, cols: int, diagonals: bool = True,
+              n_cap: Optional[int] = None, e_cap: Optional[int] = None) -> Graph:
+    """Cell-tower backbone: rows×cols grid of towers, edges between towers
+    whose coverage areas overlap (4-neighbourhood, plus diagonals by default
+    for the hexagonal-ish overlap real deployments have).
+
+    Used by the mobile/cellular scenario (paper §5.3's operator use case):
+    the tower adjacency defines which cells users can roam between and which
+    cross-cell calls are "nearby".
+    """
+    n = rows * cols
+    ids = np.arange(n, dtype=np.int64)
+    x = ids % cols
+    y = ids // cols
+    srcs: List[np.ndarray] = []
+    dsts: List[np.ndarray] = []
+    m = x + 1 < cols
+    srcs.append(ids[m]); dsts.append(ids[m] + 1)
+    m = y + 1 < rows
+    srcs.append(ids[m]); dsts.append(ids[m] + cols)
+    if diagonals:
+        m = (x + 1 < cols) & (y + 1 < rows)
+        srcs.append(ids[m]); dsts.append(ids[m] + cols + 1)
+        m = (x > 0) & (y + 1 < rows)
+        srcs.append(ids[m]); dsts.append(ids[m] + cols - 1)
+    return from_edges(np.concatenate(srcs), np.concatenate(dsts), n,
+                      n_cap=n_cap, e_cap=e_cap)
+
+
 def power_law(n: int, seed: int = 0, m: Optional[int] = None, p: float = 0.1,
               n_cap: Optional[int] = None, e_cap: Optional[int] = None) -> Graph:
     """Holme–Kim powerlaw-cluster graph (paper: D = log|V|, rewiring p = 0.1).

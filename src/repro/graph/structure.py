@@ -131,9 +131,11 @@ def apply_delta(graph: Graph, delta: GraphDelta) -> Graph:
     n_cap, e_cap = graph.n_cap, graph.e_cap
 
     # --- node deletions -------------------------------------------------
+    # max-scatter, not set: padding slots alias index 0 and a plain set would
+    # race a real deletion of node 0 with their False writes
     del_onehot = jnp.zeros((n_cap,), bool)
     del_ids = jnp.where(delta.del_mask, delta.del_nodes, 0)
-    del_onehot = del_onehot.at[del_ids].set(delta.del_mask, mode="drop")
+    del_onehot = del_onehot.at[del_ids].max(delta.del_mask, mode="drop")
     node_mask = graph.node_mask & ~del_onehot
 
     # incident edges die with their nodes

@@ -1,0 +1,21 @@
+"""Paper-scenario workload suite (§5.3): three real-world dynamic workloads
+driven end to end through the StreamEngine with compute interleaved —
+Twitter mentions + TunkRank, an adaptively refined FEM mesh, and a
+mobile/cellular call graph with user-movement churn."""
+from repro.scenarios.base import Scenario, empty_graph
+from repro.scenarios import cellular, fem, twitter
+from repro.scenarios.harness import (CostModel, bsr_snapshot, compare_scenario,
+                                     partition_relabelled, run_scenario)
+
+SCENARIOS = {
+    "twitter": twitter.build,
+    "fem": fem.build,
+    "cellular": cellular.build,
+}
+
+__all__ = [
+    "Scenario", "empty_graph", "SCENARIOS",
+    "CostModel", "bsr_snapshot", "compare_scenario", "partition_relabelled",
+    "run_scenario",
+    "twitter", "fem", "cellular",
+]

@@ -1,0 +1,82 @@
+"""Scenario contract for the paper's real-world dynamic workloads (§5.3).
+
+A ``Scenario`` bundles everything needed to drive one workload end to end
+through the ``StreamEngine``: an initial padded graph, a ``(t, src, dst)``
+event stream, the windowing/batching parameters, and the vertex program the
+paper runs on that workload. The harness (``repro.scenarios.harness``) runs
+the same scenario under adaptive and static-hash partitioning and compares
+the per-superstep execution-cost proxy.
+
+Every driver is deterministic under its seed, so the scenario regression
+tests and the e2e benchmark replay identical streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph
+from repro.stream.engine import StreamConfig
+
+
+def empty_graph(n_cap: int, e_cap: int) -> Graph:
+    """All-padding graph: the stream grows it from nothing."""
+    return Graph(src=jnp.full((e_cap,), -1, jnp.int32),
+                 dst=jnp.full((e_cap,), -1, jnp.int32),
+                 node_mask=jnp.zeros((n_cap,), bool),
+                 edge_mask=jnp.zeros((e_cap,), bool))
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One reproducible dynamic workload, ready for ``StreamEngine.run_stream``."""
+
+    name: str
+    program: str              # key into core.vertex_program.PROGRAMS
+    graph: Graph              # initial padded graph (empty for pure streams)
+    times: np.ndarray         # (m,) event timestamps, sorted
+    src: np.ndarray           # (m,) event endpoints
+    dst: np.ndarray
+    batch_span: int           # stream time per engine superstep
+    window: int               # sliding-window length (liveness horizon)
+    k: int = 8                # partitions
+    a_cap: int = 8192
+    d_cap: int = 4096
+    adapt_iters: int = 6      # migration rounds per superstep (adaptive mode)
+    payload_scale: float = 1.0  # bytes-per-message multiplier (FEM: 100 state
+                                # variables/cell; CDR: clique lists — §5.3)
+    seed: int = 0
+    notes: str = ""
+
+    @property
+    def n_events(self) -> int:
+        return int(np.asarray(self.times).shape[0])
+
+    @property
+    def supersteps(self) -> int:
+        t = np.asarray(self.times)
+        if t.size == 0:
+            return 0
+        span = int(t.max()) - int(t.min())
+        return span // self.batch_span + 1
+
+    def stream_config(self, *, adaptive: bool, seed: Optional[int] = None,
+                      recompute_every: int = 8) -> StreamConfig:
+        """Engine config for this scenario.
+
+        adaptive=True  → online placement of arrivals + interleaved xDGP
+                         migration rounds (the system under test).
+        adaptive=False → static hash partitioning: arrivals inherit the
+                         padded-slot hash, zero adaptation (the baseline the
+                         paper compares against).
+        """
+        return StreamConfig(
+            k=self.k, window=self.window,
+            a_cap=self.a_cap, d_cap=self.d_cap,
+            adapt_iters=self.adapt_iters if adaptive else 0,
+            placement="online" if adaptive else "hash",
+            dedupe=True, recompute_every=recompute_every,
+            seed=self.seed if seed is None else seed)

@@ -19,6 +19,15 @@ One object owns the full dynamic-graph serving path:
 Each superstep emits one ``SuperstepRecord`` of telemetry — ingest rate,
 backlog, cut trajectory, imbalance, migrations, placement quality — which is
 what the throughput benchmark and the ops dashboard consume.
+
+The engine can additionally run a Pregel-style ``VertexProgram`` every
+superstep (pass ``program=`` at construction): after the adaptation rounds it
+executes one BSP compute superstep on the current graph and charges the
+message traffic it generated (``local_bytes``/``remote_bytes`` under the
+current assignment) to the superstep record. This is the paper's execution
+model — computation interleaved with adaptation, iteration time bound by
+cross-partition messages (§5.3) — and is what the scenario harness
+(``repro.scenarios``) measures end to end.
 """
 from __future__ import annotations
 
@@ -33,6 +42,8 @@ import numpy as np
 from repro.core.partition_state import PartitionState, default_capacity, make_state
 from repro.core.initial import initial_partition
 from repro.core.repartitioner import adapt_jit
+from repro.core.vertex_program import VertexProgram, message_volume
+from repro.core.vertex_program import superstep as program_superstep
 from repro.graph.structure import Graph, apply_delta
 from repro.stream.ingest import IngestStats, WindowIngestor, stream_batches
 from repro.stream.metrics import (QualityTracker, cut_ratio_of, delta_update,
@@ -54,6 +65,7 @@ class StreamConfig:
     placement: str = "online"      # "online" | "hash" (inherit padded-slot hash)
     placement_passes: int = 2
     recompute_every: int = 10      # supersteps between full-recompute drift checks
+    dedupe: bool = False           # drop additions whose edge is already live
     seed: int = 0
 
 
@@ -79,6 +91,10 @@ class SuperstepRecord:
     ingest_seconds: float      # delta construction (the streaming front end)
     step_seconds: float        # full superstep wall clock
     drift: Optional[float]     # set on drift-check supersteps (must be 0.0)
+    dup_dropped: int = 0       # additions dropped as already-live (dedupe mode)
+    local_bytes: int = 0       # program message traffic staying intra-partition
+    remote_bytes: int = 0      # program message traffic crossing partitions
+    compute_seconds: float = 0.0  # vertex-program superstep wall clock
 
     @property
     def events_per_second(self) -> float:
@@ -94,7 +110,8 @@ class StreamEngine:
     """Continuous dynamic-graph partitioning over an event stream."""
 
     def __init__(self, graph: Graph, config: StreamConfig,
-                 assignment: Optional[jax.Array] = None):
+                 assignment: Optional[jax.Array] = None,
+                 program: Optional[VertexProgram] = None):
         self.config = config
         self.graph = graph
         if assignment is None:
@@ -107,7 +124,12 @@ class StreamEngine:
             seed=config.seed, capacity=capacity)
         self.ingestor = WindowIngestor(
             n_cap=graph.n_cap, window=config.window,
-            a_cap=config.a_cap, d_cap=config.d_cap)
+            a_cap=config.a_cap, d_cap=config.d_cap, dedupe=config.dedupe)
+        if config.dedupe:
+            em = np.asarray(graph.edge_mask)
+            if em.any():
+                self.ingestor.seed_live_edges(np.asarray(graph.src)[em],
+                                              np.asarray(graph.dst)[em])
         self.tracker: QualityTracker = init_tracker(graph, self.state.assignment,
                                                     config.k)
         self.telemetry: List[SuperstepRecord] = []
@@ -116,6 +138,21 @@ class StreamEngine:
         cfg = config
         self._adapt = jax.jit(lambda g, st: adapt_jit(
             g, st, s=cfg.s, iters=cfg.adapt_iters, tie_break=cfg.tie_break))
+        # optional interleaved vertex program (think-like-a-vertex compute)
+        self.program = program
+        self.program_state: Optional[jax.Array] = None
+        if program is not None:
+            self.program_state = program.init(graph)
+
+            def _prog_step(before_mask, g, st, step):
+                # vertices born this superstep enter with their init state
+                born = g.node_mask & ~before_mask
+                st = jnp.where(born[:, None], program.init(g), st)
+                return program_superstep(program, g, st, step)
+
+            self._prog_step = jax.jit(_prog_step)
+            self._msg_volume = jax.jit(
+                lambda g, lab: message_volume(g, lab, program.state_dim))
 
     # -- one superstep ------------------------------------------------------
     def superstep(self, events: np.ndarray, now: int) -> SuperstepRecord:
@@ -162,7 +199,32 @@ class StreamEngine:
         self.state = state
         self._superstep += 1
 
-        # 5. DRIFT CHECK: periodic full recompute validates the tracker
+        # dedupe mode models the live edge set exactly, which makes e_cap
+        # exhaustion detectable: apply_delta drops additions silently once
+        # free slots run out, and the mirror would drift forever after
+        if cfg.dedupe and self.ingestor.live_edge_count != int(self.tracker.edges):
+            raise RuntimeError(
+                f"edge capacity exhausted at superstep {self._superstep}: "
+                f"graph holds {int(self.tracker.edges)} live edges but "
+                f"{self.ingestor.live_edge_count} were released "
+                f"(e_cap={after.e_cap}); increase e_cap or lower a_cap")
+
+        # 5. COMPUTE: one BSP superstep of the vertex program on the adapted
+        # graph; its message traffic under the current assignment is the
+        # paper's execution-time driver (§5.3: remote messages dominate).
+        local_bytes = remote_bytes = 0
+        compute_seconds = 0.0
+        if self.program is not None:
+            t_c = time.perf_counter()
+            self.program_state = self._prog_step(
+                before.node_mask, after, self.program_state,
+                jnp.asarray(self._superstep, jnp.int32))
+            self.program_state.block_until_ready()
+            compute_seconds = time.perf_counter() - t_c
+            lb, rb = self._msg_volume(after, state.assignment)
+            local_bytes, remote_bytes = int(lb), int(rb)
+
+        # 6. DRIFT CHECK: periodic full recompute validates the tracker
         drift = None
         if cfg.recompute_every and self._superstep % cfg.recompute_every == 0:
             self.tracker, drift = drift_check(self.tracker, after, state.assignment)
@@ -180,6 +242,9 @@ class StreamEngine:
             ingest_seconds=t_ingest,
             step_seconds=time.perf_counter() - t_start,
             drift=drift,
+            dup_dropped=istats.dup_dropped,
+            local_bytes=local_bytes, remote_bytes=remote_bytes,
+            compute_seconds=compute_seconds,
         )
         self.telemetry.append(record)
         return record

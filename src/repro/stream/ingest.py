@@ -38,6 +38,7 @@ class IngestStats(NamedTuple):
     invalid: int = 0       # events rejected at the door (ids outside [0, n_cap))
     stale_dropped: int = 0  # backlogged changes invalidated by window movement
     overflow_dropped: int = 0  # over-capacity changes discarded (carry_backlog=False)
+    dup_dropped: int = 0   # additions dropped because the edge is already live
 
 
 def build_delta(add_src: np.ndarray, add_dst: np.ndarray,
@@ -193,10 +194,34 @@ class WindowIngestor:
     a_cap: int = 8192
     d_cap: int = 4096
     carry_backlog: bool = True
+    dedupe: bool = False
 
     def __post_init__(self):
         self.tracker = WindowTracker(self.n_cap)
         self.buffer = EdgeStreamBuffer(self.a_cap, self.d_cap)
+        # canonical (lo, hi) endpoints of currently-live edges (dedupe=True):
+        # lets repeated events (the same mention/call/mesh edge re-observed
+        # inside the window) refresh the window without duplicating the edge
+        self._live_lo = np.empty((0,), np.int64)
+        self._live_hi = np.empty((0,), np.int64)
+
+    @property
+    def live_edge_count(self) -> int:
+        """Size of the mirrored live edge set (dedupe mode only)."""
+        return int(self._live_lo.shape[0])
+
+    def live_edge_keys(self) -> np.ndarray:
+        """Sorted canonical keys (lo·n_cap + hi) of the mirrored live edges."""
+        return np.sort(self._live_lo * np.int64(self.n_cap) + self._live_hi)
+
+    def seed_live_edges(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Register edges that are already live (engine startup from a
+        non-empty graph); without this every pre-existing edge would pass
+        the duplicate check once and be inserted a second time."""
+        src = np.asarray(src, np.int64).reshape(-1)
+        dst = np.asarray(dst, np.int64).reshape(-1)
+        self._live_lo = np.concatenate([self._live_lo, np.minimum(src, dst)])
+        self._live_hi = np.concatenate([self._live_hi, np.maximum(src, dst)])
 
     def ingest(self, events: np.ndarray, now: int) -> Tuple[GraphDelta, IngestStats]:
         """Vectorized: push the batch, expire stale nodes, drain one delta.
@@ -237,6 +262,31 @@ class WindowIngestor:
         if stale_dropped:
             add_src, add_dst, add_t = add_src[fresh], add_dst[fresh], add_t[fresh]
             dels = dels[~live_again]
+        dup_dropped = 0
+        if self.dedupe:
+            # mirror apply_delta's order: expiring nodes take their incident
+            # edges with them first, then the surviving additions land
+            if dels.size and self._live_lo.size:
+                gone = (np.isin(self._live_lo, dels)
+                        | np.isin(self._live_hi, dels))
+                if gone.any():
+                    self._live_lo = self._live_lo[~gone]
+                    self._live_hi = self._live_hi[~gone]
+            if add_src.size:
+                lo = np.minimum(add_src, add_dst)
+                hi = np.maximum(add_src, add_dst)
+                key = lo * np.int64(self.n_cap) + hi
+                _, first = np.unique(key, return_index=True)
+                keep = np.zeros(key.shape[0], bool)
+                keep[first] = True                     # first copy in the batch wins
+                live_key = self._live_lo * np.int64(self.n_cap) + self._live_hi
+                keep &= ~np.isin(key, live_key)        # already-live edges repeat
+                dup_dropped = int((~keep).sum())
+                if dup_dropped:
+                    add_src, add_dst = add_src[keep], add_dst[keep]
+                    add_t, lo, hi = add_t[keep], lo[keep], hi[keep]
+                self._live_lo = np.concatenate([self._live_lo, lo])
+                self._live_hi = np.concatenate([self._live_hi, hi])
         if add_src.size:
             self.tracker.touch(add_t, add_src, add_dst)
         delta = build_delta(add_src, add_dst, dels, self.a_cap, self.d_cap)
@@ -244,7 +294,8 @@ class WindowIngestor:
                             dels_out=int(dels.shape[0]),
                             adds_backlog=self.buffer.backlog[0],
                             dels_backlog=self.buffer.backlog[1],
-                            invalid=invalid, stale_dropped=stale_dropped)
+                            invalid=invalid, stale_dropped=stale_dropped,
+                            dup_dropped=dup_dropped)
         if not self.carry_backlog:
             # seed semantics: over-capacity changes are discarded, not queued
             # — report them as dropped, not as phantom backlog

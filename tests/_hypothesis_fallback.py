@@ -1,0 +1,96 @@
+"""Minimal, deterministic stand-in for the subset of hypothesis the property
+suite uses, so the invariants still *run* (as a fixed-seed sampled sweep)
+when hypothesis is not installed instead of silently skipping.
+
+Real hypothesis is preferred whenever importable (CI installs it via the
+``dev`` extras) — it shrinks failures and explores adversarially. This
+fallback only replays ``max_examples`` pseudo-random samples per test,
+seeded from the test name so runs are reproducible.
+
+Supported: ``@settings(max_examples=..., deadline=...)``, ``@given(...)``
+with positional strategies, and the strategies ``integers``, ``booleans``,
+``floats`` (finite), ``sampled_from``, ``tuples``, ``lists``.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    pool = list(seq)
+    return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        def wrapper():
+            # @settings may sit above @given (stamps the wrapper) or below
+            # it (stamps the original fn) — honour both orders
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 20))
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                args = tuple(s.sample(rng) for s in strategies)
+                try:
+                    fn(*args)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback sampler): "
+                        f"{fn.__name__}{args}") from e
+        # copy identity by hand: functools.wraps would expose the original
+        # parametrised signature via __wrapped__ and pytest would demand
+        # fixtures for the strategy arguments
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(integers)
+    booleans = staticmethod(booleans)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    tuples = staticmethod(tuples)
+    lists = staticmethod(lists)
+
+
+st = _StrategiesNamespace()

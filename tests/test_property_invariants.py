@@ -1,16 +1,25 @@
-"""Hypothesis property tests on system invariants."""
+"""Property tests on system invariants.
+
+Runs under hypothesis when installed (adversarial exploration + shrinking;
+the CI ``dev`` extras install it). Without hypothesis the same properties
+run as a deterministic fixed-seed sampled sweep via the local fallback
+(``tests/_hypothesis_fallback.py``) instead of skipping silently.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                     # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import initial_partition, make_state, migrate_step, occupancy
 from repro.graph import apply_delta, cut_ratio, from_edges, generators
 from repro.graph.structure import GraphDelta
 from repro.optim.optimizer import _dequantize, _quantize
+from repro.stream import WindowIngestor
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +103,147 @@ def test_apply_delta_preserves_masks(n, seed, n_add):
     assert nm[src2[em]].all() and nm[dst2[em]].all()
     assert int(g2.num_edges) >= e0
     assert int(g2.num_nodes) >= n0
+
+
+# ---------------------------------------------------------------------------
+# windowed-ingest invariants (stream front end)
+# ---------------------------------------------------------------------------
+
+def _rand_batch(rng, n_ids, now, window, size):
+    """Events inside the current window (so none are stale on arrival)."""
+    lo = max(0, now - window + 1)
+    t = np.sort(rng.integers(lo, now + 1, size))
+    u = rng.integers(0, n_ids, size)
+    v = rng.integers(0, n_ids, size)
+    return np.stack([t, u, v], axis=1)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dedupe_ingest_never_duplicates_live_edges(seed):
+    """dedupe=True: across arbitrary event sequences (repeats, backlog,
+    expiry, resurrection) the applied graph never holds the same undirected
+    edge twice, and the ingestor's live-edge mirror matches the graph."""
+    from repro.graph.structure import Graph
+    rng = np.random.default_rng(seed)
+    n, window, span = 40, 25, 10
+    ing = WindowIngestor(n_cap=n, window=window, a_cap=16, d_cap=64,
+                         dedupe=True)
+    g = Graph(src=jnp.full((600,), -1, jnp.int32),
+              dst=jnp.full((600,), -1, jnp.int32),
+              node_mask=jnp.zeros((n,), bool),
+              edge_mask=jnp.zeros((600,), bool))
+    empty = np.empty((0, 3), np.int64)
+    steps = [(j * span, _rand_batch(rng, n, j * span, window,
+                                    int(rng.integers(5, 30))))
+             for j in range(1, 9)]
+    steps += [((9 + j) * span, empty) for j in range(12)]   # drain the backlog
+    for now, ev in steps:
+        delta, _ = ing.ingest(ev, now)
+        g = apply_delta(g, delta)
+        em = np.asarray(g.edge_mask)
+        s = np.asarray(g.src)[em].astype(np.int64)
+        d = np.asarray(g.dst)[em].astype(np.int64)
+        key = np.minimum(s, d) * n + np.maximum(s, d)
+        assert np.unique(key).size == key.size, "duplicate live edge"
+        mirror = ing.live_edge_keys()
+        assert np.array_equal(np.sort(key), mirror), "live-set mirror drifted"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_window_expiry_matches_reference_model(seed):
+    """Expiry respects the window: tracked nodes are exactly those seen
+    within it, and released deletions are exactly the nodes that fell out."""
+    rng = np.random.default_rng(seed)
+    n, window = 60, 20
+    ing = WindowIngestor(n_cap=n, window=window, a_cap=4096, d_cap=4096)
+    model = {}
+    now = 0
+    for _ in range(12):
+        now += int(rng.integers(3, 15))
+        ev = _rand_batch(rng, n, now, window, int(rng.integers(0, 25)))
+        delta, _ = ing.ingest(ev, now)
+        horizon = now - window
+        for t, u, v in ev:
+            model[u] = max(model.get(u, t), t)
+            model[v] = max(model.get(v, t), t)
+        expired = {v for v, t in model.items() if t < horizon}
+        for v in expired:
+            del model[v]
+        tracked = set(np.flatnonzero(
+            ing.tracker.last_seen != ing.tracker.NEVER).tolist())
+        assert tracked == set(model), "window liveness diverged"
+        dels = set(np.asarray(delta.del_nodes)[np.asarray(delta.del_mask)]
+                   .tolist())
+        assert dels == expired, "released deletions != expired set"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 32), st.sampled_from([False, True]))
+def test_add_backlog_conservation_under_backpressure(seed, a_cap, dedupe):
+    """Every valid addition is accounted for: released + still-queued +
+    dropped-as-duplicate, at every step and after a full drain."""
+    rng = np.random.default_rng(seed)
+    n = 30
+    ing = WindowIngestor(n_cap=n, window=10 ** 9, a_cap=a_cap, d_cap=64,
+                         dedupe=dedupe)
+    pushed = released = dups = 0
+    for j in range(1, 8):
+        size = int(rng.integers(0, 40))
+        ev = _rand_batch(rng, n, j * 10, 10 ** 9, size)
+        ev[rng.random(size) < 0.1, 1] = n + 5        # some invalid endpoints
+        _, s = ing.ingest(ev, j * 10)
+        pushed += size - s.invalid
+        released += s.adds_out
+        dups += s.dup_dropped
+        assert pushed == released + dups + s.adds_backlog
+    empty = np.empty((0, 3), np.int64)
+    for _ in range(200):
+        if ing.buffer.backlog[0] == 0:
+            break
+        _, s = ing.ingest(empty, 80)
+        released += s.adds_out
+        dups += s.dup_dropped
+    assert ing.buffer.backlog[0] == 0, "backlog failed to drain"
+    assert pushed == released + dups
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8))
+def test_del_backlog_conservation_under_backpressure(seed, d_cap):
+    """Expired nodes queued under d_cap backpressure are all accounted for:
+    released, still queued, or dropped because the node came back to life."""
+    rng = np.random.default_rng(seed)
+    n, window = 40, 15
+    ing = WindowIngestor(n_cap=n, window=window, a_cap=4096, d_cap=d_cap)
+    pushed_dels = 0
+    orig_push = ing.buffer.push_node_removals
+
+    def counting_push(nodes):
+        nonlocal pushed_dels
+        pushed_dels += int(np.asarray(nodes).reshape(-1).shape[0])
+        orig_push(nodes)
+
+    ing.buffer.push_node_removals = counting_push
+    released = dropped = 0
+    now = 0
+    for _ in range(14):
+        now += int(rng.integers(4, 20))
+        ev = _rand_batch(rng, n, now, window, int(rng.integers(0, 20)))
+        _, s = ing.ingest(ev, now)
+        released += s.dels_out
+        dropped += s.stale_dropped        # adds are never stale here (in-window)
+        assert pushed_dels == released + dropped + s.dels_backlog
+    empty = np.empty((0, 3), np.int64)
+    for _ in range(300):
+        if ing.buffer.backlog[1] == 0:
+            break
+        _, s = ing.ingest(empty, now)
+        released += s.dels_out
+        dropped += s.stale_dropped
+    assert ing.buffer.backlog[1] == 0
+    assert pushed_dels == released + dropped
 
 
 # ---------------------------------------------------------------------------
