@@ -5,22 +5,21 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
-from repro.graph import cut_ratio, generators
+from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
+from repro.graph import generators
 from repro.runtime import elastic_rescale
 
 
 def run(quick: bool = False) -> List[Dict]:
     g = generators.fem_cube(14 if quick else 24)
     k0 = 16
-    part = AdaptivePartitioner(AdaptiveConfig(k=k0, s=0.5, max_iters=120,
-                                              patience=120))
-    state = part.init_state(g, initial_partition(g, k0, "hsh"))
-    state, _ = part.adapt(g, state, 60 if quick else 120)
-    base_cut = float(cut_ratio(g, state.assignment))
+    system = DynamicGraphSystem(g, SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=k0, s=0.5, slack=0.1)))
+    system.adapt(60 if quick else 120)
+    base_cut = system.cut_ratio
     rows: List[Dict] = []
     for new_k in (15, 12, 8):
-        _, _, rep = elastic_rescale(g, state.assignment, k0, new_k,
+        _, _, rep = elastic_rescale(g, system.labels, k0, new_k,
                                     adapt_iters=40 if quick else 80)
         rep.update({"bench": "elastic", "baseline_cut_k16": round(base_cut, 4)})
         rep["cut_after_rehash"] = round(rep["cut_after_rehash"], 4)

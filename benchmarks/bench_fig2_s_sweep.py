@@ -11,7 +11,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
+from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
 from repro.graph import cut_ratio, generators
 
 S_VALUES = [0.1, 0.3, 0.5, 0.7, 0.9]
@@ -30,13 +30,13 @@ def run(quick: bool = False) -> List[Dict]:
         for s in S_VALUES:
             finals, iters_list = [], []
             for rep in range(n_rep):
-                cfg = AdaptiveConfig(k=9, s=s, seed=rep,
-                                     max_iters=150 if quick else 220,
-                                     patience=20 if quick else 30)
-                part = AdaptivePartitioner(cfg)
-                state = part.init_state(g, initial_partition(g, 9, "hsh"))
-                state, hist = part.run_to_convergence(g, state)
-                finals.append(float(cut_ratio(g, state.assignment)))
+                cfg = SystemConfig(partition=PartitionSection(
+                    strategy="xdgp", k=9, s=s, slack=0.1,
+                    max_iters=150 if quick else 220,
+                    patience=20 if quick else 30), seed=rep)
+                system = DynamicGraphSystem(g, cfg)
+                hist = system.converge()
+                finals.append(float(cut_ratio(g, system.labels)))
                 # convergence = first iteration reaching within 2% of final cut
                 target = finals[-1] * 1.02
                 conv = next((i for i, c in enumerate(hist.cut_ratio)

@@ -11,7 +11,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
+from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
+from repro.core import initial_partition
 from repro.graph import cut_ratio, generators
 
 GRAPHS_FULL = {
@@ -36,14 +37,17 @@ def run(quick: bool = False) -> List[Dict]:
     for gname, build in graphs.items():
         g = build()
         for strat in STRATEGIES:
+            # the sweep variable IS the strategy's init hook; the adaptive
+            # pass on top is the same xdgp session for every row
             lab = initial_partition(g, k, strat)
             initial = float(cut_ratio(g, lab))
-            cfg = AdaptiveConfig(k=k, s=0.5, max_iters=120 if quick else 220,
-                                 patience=25 if quick else 35)
-            part = AdaptivePartitioner(cfg)
-            state = part.init_state(g, lab)
-            state, hist = part.run_to_convergence(g, state)
-            final = float(cut_ratio(g, state.assignment))
+            cfg = SystemConfig(partition=PartitionSection(
+                strategy="xdgp", k=k, s=0.5, slack=0.1,
+                max_iters=120 if quick else 220,
+                patience=25 if quick else 35))
+            system = DynamicGraphSystem(g, cfg, assignment=lab)
+            hist = system.converge()
+            final = float(cut_ratio(g, system.labels))
             rows.append({
                 "bench": "fig5", "graph": gname, "strategy": strat,
                 "initial_cut": round(initial, 4), "final_cut": round(final, 4),

@@ -12,7 +12,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
+from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
 from repro.graph import cut_ratio, generators
 
 
@@ -25,11 +25,12 @@ def run(quick: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     for gname, build in graphs.items():
         g = build()
-        cfg = AdaptiveConfig(k=9, s=0.5, max_iters=100 if quick else 200,
-                             patience=20 if quick else 30)
-        part = AdaptivePartitioner(cfg)
-        state = part.init_state(g, initial_partition(g, 9, "hsh"))
-        state, hist = part.run_to_convergence(g, state)
+        cfg = SystemConfig(partition=PartitionSection(
+            strategy="xdgp", k=9, s=0.5, slack=0.1,
+            max_iters=100 if quick else 200,
+            patience=20 if quick else 30))
+        system = DynamicGraphSystem(g, cfg)
+        hist = system.converge()
         mig = np.asarray(hist.migrations, dtype=np.float64)
         cum = np.cumsum(mig)
         total = max(cum[-1], 1)

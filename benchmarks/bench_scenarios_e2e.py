@@ -3,9 +3,10 @@ claim, measured.
 
 Drives the three real-world dynamic workloads (Twitter mentions + TunkRank,
 adaptively refined FEM mesh, mobile/cellular call churn) end to end through
-the StreamEngine — vertex-program compute interleaved with ingestion and
-adaptation — under adaptive partitioning and under static hash partitioning,
-on identical event streams. The execution-cost proxy per superstep is
+``repro.api.DynamicGraphSystem.compare`` — vertex-program compute
+interleaved with ingestion and adaptation — under the ``xdgp`` strategy and
+under the ``static`` baseline (one ``SystemConfig`` field apart), on
+identical event streams. The execution-cost proxy per superstep is
 
   c_cpu·local_bytes + c_net·remote_bytes + c_mig·migrations·unit
 

@@ -6,7 +6,7 @@ Replays a synthetic CDR stream (default 100k events) through
       window tracking (the pre-streaming-layer ``SlidingWindowGraph.advance``
       implementation, reproduced here verbatim as the baseline), and
   (b) the streaming layer — ``WindowIngestor`` (vectorized batch build +
-      scatter-max expiry) driven by ``StreamEngine``.
+      scatter-max expiry) driven by ``repro.api.DynamicGraphSystem``.
 
 Reported per path:
   * ingest events/sec — the events → GraphDelta stage (the part the seed did
@@ -28,16 +28,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import save
+from repro.api import (DynamicGraphSystem, PartitionSection, StreamSection,
+                       SystemConfig, TelemetrySection, XdgpAdaptive,
+                       empty_graph)
 from repro.graph import generators
-from repro.graph.structure import Graph, GraphDelta, apply_delta
-from repro.stream import StreamConfig, StreamEngine, stream_batches
-
-
-def empty_graph(n_cap: int, e_cap: int) -> Graph:
-    return Graph(src=jnp.full((e_cap,), -1, jnp.int32),
-                 dst=jnp.full((e_cap,), -1, jnp.int32),
-                 node_mask=jnp.zeros((n_cap,), bool),
-                 edge_mask=jnp.zeros((e_cap,), bool))
+from repro.graph.structure import GraphDelta, apply_delta
+from repro.stream import stream_batches
 
 
 def seed_path(times, src, dst, n_cap, e_cap, window, a_cap, d_cap, span):
@@ -92,11 +88,15 @@ def seed_path(times, src, dst, n_cap, e_cap, window, a_cap, d_cap, span):
 
 def engine_path(times, src, dst, n_cap, e_cap, window, a_cap, d_cap, span,
                 placement: str, adapt_iters: int):
-    cfg = StreamConfig(k=8, window=window, a_cap=a_cap, d_cap=d_cap,
-                       adapt_iters=adapt_iters, placement=placement,
-                       recompute_every=5)
-    eng = StreamEngine(empty_graph(n_cap, e_cap), cfg)
-    recs = eng.run_stream(times, src, dst, span)
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=span,
+                             a_cap=a_cap, d_cap=d_cap),
+        partition=PartitionSection(strategy="xdgp", k=8,
+                                   adapt_iters=adapt_iters),
+        telemetry=TelemetrySection(recompute_every=5))
+    system = DynamicGraphSystem(empty_graph(n_cap, e_cap), cfg,
+                                strategy=XdgpAdaptive(placement=placement))
+    recs = system.run((times, src, dst))
     drift = [r.drift for r in recs if r.drift is not None]
     assert drift and all(d == 0.0 for d in drift), f"tracker drift: {drift}"
     events = sum(r.events for r in recs)

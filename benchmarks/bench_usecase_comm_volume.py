@@ -14,7 +14,8 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import CommModel
-from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
+from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
+from repro.core import initial_partition
 from repro.core.vertex_program import message_volume
 from repro.graph import cut_ratio, generators
 
@@ -22,20 +23,21 @@ from repro.graph import cut_ratio, generators
 def _workload(name, build, state_dim, k=9, quick=False):
     g = build()
     lab0 = initial_partition(g, k, "hsh")
-    part = AdaptivePartitioner(AdaptiveConfig(k=k, s=0.5,
-                                              max_iters=80 if quick else 180,
-                                              patience=20 if quick else 30))
-    state = part.init_state(g, lab0)
-    state, hist = part.run_to_convergence(g, state)
+    system = DynamicGraphSystem(g, SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=k, s=0.5, slack=0.1,
+                                   max_iters=80 if quick else 180,
+                                   patience=20 if quick else 30)),
+        assignment=lab0)
+    hist = system.converge()
     model = CommModel()
     l0, r0 = message_volume(g, lab0, state_dim)
-    l1, r1 = message_volume(g, state.assignment, state_dim)
+    l1, r1 = message_volume(g, system.labels, state_dim)
     t0 = model.step_time(float(l0), float(r0))
     t1 = model.step_time(float(l1), float(r1))
     return {
         "bench": "usecase", "workload": name,
         "cut_before": round(float(cut_ratio(g, lab0)), 4),
-        "cut_after": round(float(cut_ratio(g, state.assignment)), 4),
+        "cut_after": round(float(cut_ratio(g, system.labels)), 4),
         "remote_bytes_before": float(r0), "remote_bytes_after": float(r1),
         "remote_reduction_pct": round(100 * (1 - float(r1) / max(float(r0), 1)), 1),
         "modelled_speedup": round(t0 / t1, 2),

@@ -1,47 +1,39 @@
 """Continuous processing of a dynamic graph (the paper's §5.3 CDR use case):
 a sliding-window call graph is streamed in while TunkRank influence is
-computed every superstep and the partitioning adapts online.
+computed every superstep and the partitioning adapts online — one
+``DynamicGraphSystem`` session owns the whole loop, including the message
+accounting that drives the paper's execution-time model.
 
   PYTHONPATH=src python examples/dynamic_graph_processing.py
 """
-import numpy as np
 import jax.numpy as jnp
 
-from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
-from repro.core.vertex_program import message_volume, run as vp_run, tunkrank
-from repro.graph import cut_ratio, generators
-from repro.graph.dynamics import SlidingWindowGraph, stream_batches
-from repro.graph.structure import Graph
+from repro.api import (ComputeSection, DynamicGraphSystem, PartitionSection,
+                       StreamSection, SystemConfig, empty_graph)
+from repro.graph import generators
+from repro.stream import stream_batches
 
 
 def main() -> None:
     n_users, n_events, window = 4000, 20000, 300
     times, callers, callees = generators.sliding_window_stream(
         n_users, n_events, window, seed=7)
-    g = Graph(src=jnp.full((28000,), -1, jnp.int32),
-              dst=jnp.full((28000,), -1, jnp.int32),
-              node_mask=jnp.zeros((n_users,), bool),
-              edge_mask=jnp.zeros((28000,), bool))
-    swg = SlidingWindowGraph(g, window, a_cap=8192, d_cap=4096)
-    k = 9
-    part = AdaptivePartitioner(AdaptiveConfig(k=k, s=0.5, slack=0.4,
-                                              max_iters=10, patience=10))
-    state = None
-    prog = tunkrank()
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=window // 3,
+                             a_cap=8192, d_cap=4096),
+        partition=PartitionSection(strategy="xdgp", k=9, adapt_iters=5,
+                                   slack=0.4),
+        compute=ComputeSection(program="tunkrank"))
+    system = DynamicGraphSystem(empty_graph(n_users, 28000), cfg)
+
     print(f"{'batch':>5s} {'nodes':>7s} {'edges':>7s} {'cut':>6s} "
           f"{'remote_MB':>9s} {'top_influence':>13s}")
     for i, (now, events) in enumerate(
             stream_batches(times, callers, callees, window // 3)):
-        graph = swg.advance(events, now)
-        if state is None:
-            state = part.init_state(graph, initial_partition(graph, k, "hsh"))
-        state, _ = part.adapt(graph, state, 5)     # adapt between supersteps
-        influence = vp_run(prog, graph, 3)          # continuous computation
-        _, remote = message_volume(graph, state.assignment, state_dim=1)
-        top = float(jnp.max(influence))
-        print(f"{i:5d} {int(graph.num_nodes):7d} {int(graph.num_edges):7d} "
-              f"{float(cut_ratio(graph, state.assignment)):6.3f} "
-              f"{float(remote)/1e6:9.2f} {top:13.3f}")
+        rec = system.step(events, now)
+        top = float(jnp.max(system.program_state))   # influence after this superstep
+        print(f"{i:5d} {int(system.graph.num_nodes):7d} {rec.live_edges:7d} "
+              f"{rec.cut_ratio:6.3f} {rec.remote_bytes / 1e6:9.2f} {top:13.3f}")
         if i >= 15:
             break
 

@@ -4,22 +4,22 @@ beyond the paper's snapshot-restore (§4.3).
 
   PYTHONPATH=src python examples/elastic_recovery.py
 """
-from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
-from repro.graph import cut_ratio, generators
+from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
+from repro.graph import generators
 from repro.runtime import elastic_rescale
 
 
 def main() -> None:
     g = generators.fem_cube(18)
     k = 16
-    part = AdaptivePartitioner(AdaptiveConfig(k=k, max_iters=150, patience=150))
-    state = part.init_state(g, initial_partition(g, k, "hsh"))
-    state, _ = part.adapt(g, state, 120)
-    print(f"healthy cluster (k=16): cut={float(cut_ratio(g, state.assignment)):.3f}")
+    system = DynamicGraphSystem(g, SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=k, slack=0.1)))
+    system.adapt(120)
+    print(f"healthy cluster (k=16): cut={system.snapshot()['cut_ratio']:.3f}")
 
     # two workers die
     assignment, hist, report = elastic_rescale(
-        g, state.assignment, old_k=16, new_k=14, lost=(3, 11), adapt_iters=80)
+        g, system.labels, old_k=16, new_k=14, lost=(3, 11), adapt_iters=80)
     print(f"after losing workers 3,11 -> rehash orphans: "
           f"cut={report['cut_after_rehash']:.3f}")
     print(f"after re-adaptation (k=14): cut={report['cut_after_adapt']:.3f} "

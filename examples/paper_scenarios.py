@@ -1,6 +1,8 @@
 """Replay the paper's three real-world dynamic workloads (§5.3) through the
-StreamEngine with compute interleaved, and watch adaptive partitioning beat
-static hash on the execution-cost proxy.
+``repro.api`` front door with compute interleaved, and watch adaptive
+partitioning beat static hash on the execution-cost proxy. The comparison
+is one ``DynamicGraphSystem.compare`` call — the baseline is just the
+``static`` strategy swapped into the same ``SystemConfig``.
 
   PYTHONPATH=src python examples/paper_scenarios.py [scenario ...]
 

@@ -2,40 +2,41 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Loads a FEM mesh, hash-partitions it across 9 workers (paper setup),
-runs the xDGP heuristic to convergence, injects a 5% forest-fire burst,
-and adapts again — printing cut ratio + balance at each stage.
+One front door: build a ``DynamicGraphSystem`` session over a FEM mesh with
+the ``xdgp`` strategy (paper setup: 9 workers), converge, inject a 5%
+forest-fire burst, adapt again — printing cut ratio + balance at each stage.
+Swap ``strategy="xdgp"`` for ``"static"`` (or any other registered name) to
+ablate the adaptive policy with no other change.
 """
-import numpy as np
-
-from repro.core import (AdaptiveConfig, AdaptivePartitioner, imbalance,
-                        initial_partition)
-from repro.graph import apply_delta, cut_ratio, generators
+from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
+from repro.graph import generators
 
 
 def main() -> None:
     # graph with head-room for growth (static shapes, masked)
     g = generators.fem_cube(16, n_cap=5200, e_cap=16000)
-    k = 9
-    cfg = AdaptiveConfig(k=k, s=0.5, slack=0.3, max_iters=200, patience=30)
-    part = AdaptivePartitioner(cfg)
+    cfg = SystemConfig(partition=PartitionSection(
+        strategy="xdgp", k=9, s=0.5, slack=0.3, max_iters=200, patience=30))
+    system = DynamicGraphSystem(g, cfg)
 
-    lab = initial_partition(g, k, "hsh")
-    print(f"initial (hash):     cut={float(cut_ratio(g, lab)):.3f}")
+    snap = system.snapshot()
+    print(f"initial (hash):     cut={snap['cut_ratio']:.3f}")
 
-    state = part.init_state(g, lab)
-    state, hist = part.run_to_convergence(g, state)
-    print(f"after adaptation:   cut={hist.cut_ratio[-1]:.3f} "
+    hist = system.converge()
+    snap = system.snapshot()
+    print(f"after adaptation:   cut={snap['cut_ratio']:.3f} "
           f"({hist.iterations} iters, {hist.total_migrations} migrations, "
-          f"imbalance={float(imbalance(state, g.node_mask)):.3f})")
+          f"imbalance={snap['imbalance']:.3f})")
 
-    delta = generators.forest_fire_delta(g, 0.05, seed=1)
-    g = apply_delta(g, delta)
-    burst_cut = float(cut_ratio(g, state.assignment))
-    print(f"after 5% burst:     cut={burst_cut:.3f}")
+    delta = generators.forest_fire_delta(system.graph, 0.05, seed=1)
+    placed = system.inject(delta)
+    snap = system.snapshot()
+    print(f"after 5% burst:     cut={snap['cut_ratio']:.3f} "
+          f"({placed} vertices placed online)")
 
-    state, hist = part.adapt(g, state, 40)
-    print(f"after re-adaptation: cut={hist.cut_ratio[-1]:.3f} "
+    hist = system.adapt(40)
+    snap = system.snapshot()
+    print(f"after re-adaptation: cut={snap['cut_ratio']:.3f} "
           f"({hist.total_migrations} migrations)")
 
 

@@ -1,47 +1,44 @@
-"""Serve a live dynamic graph with the streaming ingestion engine.
+"""Serve a live dynamic graph with the streaming front door.
 
-Replays a CDR-style call stream through ``StreamEngine`` — vectorized
-ingest, online placement of arriving users, interleaved xDGP adaptation,
-incremental cut/occupancy telemetry — and prints the per-superstep ops view.
-A second pass with placement="hash" shows what online placement buys: the
-hash run has to recover arrival damage via migrations every superstep.
+Replays a CDR-style call stream through ``repro.api.DynamicGraphSystem`` —
+vectorized ingest, strategy-driven placement of arriving users, interleaved
+xDGP adaptation, incremental cut/occupancy telemetry — and prints the
+per-superstep ops view. A second pass with the same config but
+``XdgpAdaptive(placement="inherit")`` shows what online placement buys: the
+inherit run has to recover arrival damage via migrations every superstep.
 
   PYTHONPATH=src python examples/streaming_engine.py
 """
 import numpy as np
-import jax.numpy as jnp
 
+from repro.api import (DynamicGraphSystem, PartitionSection, StreamSection,
+                       SystemConfig, TelemetrySection, XdgpAdaptive,
+                       empty_graph)
 from repro.graph import generators
-from repro.graph.structure import Graph
-from repro.stream import StreamConfig, StreamEngine
-
-
-def fresh_graph(n_users: int, e_cap: int) -> Graph:
-    return Graph(src=jnp.full((e_cap,), -1, jnp.int32),
-                 dst=jnp.full((e_cap,), -1, jnp.int32),
-                 node_mask=jnp.zeros((n_users,), bool),
-                 edge_mask=jnp.zeros((e_cap,), bool))
 
 
 def run(placement: str, times, callers, callees, n_users, window) -> None:
-    cfg = StreamConfig(k=9, window=window, adapt_iters=4, placement=placement,
-                       a_cap=8192, d_cap=4096, recompute_every=5)
-    engine = StreamEngine(fresh_graph(n_users, 40000), cfg)
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=window // 3,
+                             a_cap=8192, d_cap=4096),
+        partition=PartitionSection(strategy="xdgp", k=9, adapt_iters=4),
+        telemetry=TelemetrySection(recompute_every=5))
+    system = DynamicGraphSystem(empty_graph(n_users, 40000), cfg,
+                                strategy=XdgpAdaptive(placement=placement))
     print(f"\n=== placement={placement} ===")
     print(f"{'step':>4s} {'events':>7s} {'ev/s':>10s} {'backlog':>7s} "
           f"{'placed':>6s} {'moved':>6s} {'cut':>6s} {'imbal':>6s} {'drift':>5s}")
-    for rec in engine.run_stream(times, callers, callees, window // 3,
-                                 max_supersteps=16):
+    for rec in system.run((times, callers, callees), max_supersteps=16):
         drift = "-" if rec.drift is None else f"{rec.drift:.0f}"
         print(f"{rec.superstep:4d} {rec.events:7d} {rec.events_per_second:10.0f} "
               f"{rec.backlog_adds + rec.backlog_dels:7d} {rec.new_placed:6d} "
               f"{rec.migrations:6d} {rec.cut_ratio:6.3f} {rec.imbalance:6.2f} "
               f"{drift:>5s}")
-    total_ev = sum(r.events for r in engine.telemetry)
-    ingest_s = sum(r.ingest_seconds for r in engine.telemetry)
-    moved = sum(r.migrations for r in engine.telemetry)
+    total_ev = sum(r.events for r in system.telemetry)
+    ingest_s = sum(r.ingest_seconds for r in system.telemetry)
+    moved = sum(r.migrations for r in system.telemetry)
     print(f"ingested {total_ev} events at {total_ev / max(ingest_s, 1e-12):.0f} ev/s; "
-          f"final cut {engine.telemetry[-1].cut_ratio:.3f}, "
+          f"final cut {system.telemetry[-1].cut_ratio:.3f}, "
           f"{moved} migrations total")
 
 
@@ -50,7 +47,7 @@ def main() -> None:
     times, callers, callees = generators.sliding_window_stream(
         n_users, n_events, window, seed=7)
     run("online", times, callers, callees, n_users, window)
-    run("hash", times, callers, callees, n_users, window)
+    run("inherit", times, callers, callees, n_users, window)
 
 
 if __name__ == "__main__":

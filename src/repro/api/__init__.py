@@ -1,0 +1,42 @@
+"""repro.api — the one front door to the xDGP runtime.
+
+Three pieces (DESIGN.md §8):
+
+  * ``PartitionStrategy`` — pluggable partitioning policy (init / place /
+    adapt hooks) with a registry: ``static``, ``hash``, ``random``, ``dgr``,
+    ``mnn``, ``fennel``, ``xdgp`` (+ seed-era aliases).
+  * ``SystemConfig`` — layered graph/stream/partition/compute/telemetry
+    sections, ``to_dict``/``from_dict`` round-trip.
+  * ``DynamicGraphSystem`` — the session: ``step``/``run`` (streaming),
+    ``converge``/``adapt`` (batch), ``snapshot``/``score``/``compare``
+    (measurement).
+
+``__all__`` is the frozen public surface, pinned by the API snapshot test —
+extend it deliberately, never accidentally.
+"""
+from repro.api.config import (ComputeSection, GraphSection, PartitionSection,
+                              StreamSection, SystemConfig, TelemetrySection)
+from repro.api.strategy import (Block, Dgr, Hash, Mnn, Modulo, OnlineFennel,
+                                PartitionStrategy, Random, Static,
+                                StrategyContext, XdgpAdaptive,
+                                register_strategy, resolve_strategy,
+                                strategy_names)
+from repro.api.system import (DynamicGraphSystem, SuperstepRecord,
+                              bsr_snapshot, empty_graph, partition_relabelled)
+from repro.core.repartitioner import History
+from repro.core.vertex_program import CostModel
+
+__all__ = [
+    # config
+    "SystemConfig", "GraphSection", "StreamSection", "PartitionSection",
+    "ComputeSection", "TelemetrySection",
+    # strategy protocol + registry
+    "PartitionStrategy", "StrategyContext",
+    "register_strategy", "resolve_strategy", "strategy_names",
+    # shipped strategies
+    "Static", "Hash", "Random", "Modulo", "Block", "Dgr", "Mnn",
+    "OnlineFennel", "XdgpAdaptive",
+    # session + measurement
+    "DynamicGraphSystem", "SuperstepRecord", "History", "CostModel",
+    "empty_graph", "bsr_snapshot", "partition_relabelled",
+]

@@ -1,0 +1,134 @@
+"""Layered system configuration — the one knob surface for the front door.
+
+``SystemConfig`` replaces the overlapping ``AdaptiveConfig`` /
+``StreamConfig`` knob sets with five orthogonal sections:
+
+  graph      — slot capacities when the session builds its own empty graph
+  stream     — ingestion: window, batching, backpressure caps, dedupe
+  partition  — the strategy name plus every partitioning knob it may read
+  compute    — interleaved vertex program + the §5.3 execution-cost model
+  telemetry  — drift-check cadence and snapshot tiling
+
+Every field is a JSON-compatible scalar, so ``to_dict``/``from_dict``
+round-trip losslessly — configs can live in result files, CI matrices and
+experiment sweeps. ``from_dict`` rejects unknown keys with the valid set in
+the message (the same fail-loudly contract as the strategy registry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSection:
+    """Slot capacities used when no initial ``Graph`` is supplied."""
+
+    n_cap: int = 0                 # vertex slots (0 = a graph must be passed)
+    e_cap: int = 0                 # edge slots
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSection:
+    """Ingestion-side knobs (the former ``StreamConfig`` surface)."""
+
+    window: int = 300              # sliding-window length (event time units)
+    batch_span: int = 100          # stream time per superstep (run() default)
+    a_cap: int = 8192              # max edge additions per superstep
+    d_cap: int = 4096              # max node expiries per superstep
+    dedupe: bool = False           # drop additions whose edge is already live
+    carry_backlog: bool = True     # False = seed semantics (overflow dropped)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSection:
+    """Partitioning strategy + every knob a strategy may read from its ctx."""
+
+    strategy: str = "xdgp"         # registry name (see repro.api.strategy)
+    k: int = 8                     # partitions
+    s: float = 0.5                 # migration damping (paper §3.4)
+    adapt_iters: int = 5           # migration rounds interleaved per superstep
+    tie_break: str = "random"      # "stay" = paper's literal rule
+    slack: float = 0.2             # capacity head-room over n_cap/k
+    placement_passes: int = 2      # online-placement refinement passes
+    patience: int = 30             # converge(): quiet/plateau window
+    max_iters: int = 500           # converge(): hard iteration cap
+    rel_tol: float = 1e-3          # converge(): cut plateau tolerance
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeSection:
+    """Interleaved vertex program + §5.3 execution-cost model constants."""
+
+    program: Optional[str] = None  # key into core.vertex_program.PROGRAMS
+    payload_scale: float = 1.0     # bytes-per-message multiplier (FEM/CDR §5.3)
+    c_cpu: float = 1.0             # cost per local message byte
+    c_net: float = 25.0            # cost per remote message byte (§5.3: 25×)
+    c_mig: float = 50.0            # cost per migrated vertex, in message units
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySection:
+    """Measurement-side knobs."""
+
+    recompute_every: int = 10      # supersteps between full drift checks (0 = off)
+    bsr_blk: int = 32              # tile size for snapshot() BSR stats
+
+
+_SECTIONS = {
+    "graph": GraphSection,
+    "stream": StreamSection,
+    "partition": PartitionSection,
+    "compute": ComputeSection,
+    "telemetry": TelemetrySection,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    """The complete configuration of one ``DynamicGraphSystem`` session."""
+
+    graph: GraphSection = dataclasses.field(default_factory=GraphSection)
+    stream: StreamSection = dataclasses.field(default_factory=StreamSection)
+    partition: PartitionSection = dataclasses.field(default_factory=PartitionSection)
+    compute: ComputeSection = dataclasses.field(default_factory=ComputeSection)
+    telemetry: TelemetrySection = dataclasses.field(default_factory=TelemetrySection)
+    seed: int = 0                  # session randomness (placement ties, damping)
+
+    # -- serialisation ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {name: dataclasses.asdict(getattr(self, name))
+                             for name in _SECTIONS}
+        d["seed"] = self.seed
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SystemConfig":
+        valid_top = set(_SECTIONS) | {"seed"}
+        unknown = sorted(set(d) - valid_top)
+        if unknown:
+            raise ValueError(f"unknown SystemConfig sections {unknown}; "
+                             f"valid: {sorted(valid_top)}")
+        kwargs: Dict[str, Any] = {}
+        for name, sec_cls in _SECTIONS.items():
+            if name in d:
+                sec = d[name]
+                fields = {f.name for f in dataclasses.fields(sec_cls)}
+                bad = sorted(set(sec) - fields)
+                if bad:
+                    raise ValueError(f"unknown keys {bad} in '{name}' section; "
+                                     f"valid: {sorted(fields)}")
+                kwargs[name] = sec_cls(**sec)
+        if "seed" in d:
+            kwargs["seed"] = int(d["seed"])
+        return cls(**kwargs)
+
+    # -- convenience --------------------------------------------------------
+    def with_strategy(self, strategy: str) -> "SystemConfig":
+        """Same config, different partitioning strategy — the one-field swap
+        that turns the system under test into its baseline (and back)."""
+        return dataclasses.replace(
+            self, partition=dataclasses.replace(self.partition, strategy=strategy))
+
+    def with_seed(self, seed: int) -> "SystemConfig":
+        return dataclasses.replace(self, seed=int(seed))

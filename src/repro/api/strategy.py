@@ -1,0 +1,314 @@
+"""Pluggable partitioning strategies behind one protocol (the Spinner/SDP
+shape: partitioning as a swappable policy inside a stable processing API).
+
+A ``PartitionStrategy`` answers the three questions the runtime asks:
+
+  init(graph, k)           -> labels   initial assignment of every vertex slot
+  place(delta, ctx)        -> labels   where do *arriving* vertices go?
+  adapt(graph, state, ctx) -> state    interleaved repartitioning per superstep
+
+plus two batch-mode extensions used by ``DynamicGraphSystem.converge()`` /
+``.adapt()``: ``converge(graph, state, ctx)`` and
+``adapt_rounds(graph, state, iters, ctx)``, both returning
+``(state, History)``.
+
+Contract for ``place``: it may only relabel vertices that were dead before
+the delta (``ctx.node_mask``) — surviving vertices keep their labels, which
+is what keeps the incremental ``QualityTracker`` exact (see
+``repro.stream.metrics``). Strategies that know exactly how many vertices
+they placed report it via ``ctx.placed``; otherwise the system derives the
+count from the liveness diff.
+
+Strategies register under a name (plus seed-era aliases) in a module-level
+registry; ``resolve_strategy`` turns a name / class / instance into an
+instance and raises a ``ValueError`` listing every registered name on a
+typo. ``repro.core.initial.initial_partition`` dispatches through the same
+registry, so "adaptive vs. static-hash" is two strategy values — never two
+code paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+
+from repro.core.initial import (block_partition, deterministic_greedy,
+                                hash_partition, min_neighbours,
+                                modulo_partition, random_partition)
+from repro.core.partition_state import PartitionState
+from repro.core.repartitioner import (History, adapt_jit, adapt_rounds,
+                                      run_to_convergence)
+from repro.graph.structure import Graph, GraphDelta
+from repro.stream.placement import place_delta
+
+
+@dataclasses.dataclass
+class StrategyContext:
+    """Everything a strategy may read during one runtime call.
+
+    The partitioning knobs mirror ``SystemConfig.partition``; the array
+    fields are filled by the system per call. ``placed`` is the one
+    out-parameter: a placement strategy sets it to the exact number of
+    vertices it placed.
+    """
+
+    k: int = 8
+    s: float = 0.5
+    adapt_iters: int = 5
+    tie_break: str = "random"
+    placement_passes: int = 2
+    patience: int = 30
+    max_iters: int = 500
+    rel_tol: float = 1e-3
+    record_history: bool = True
+    # runtime arrays (filled by the system per call)
+    node_mask: Optional[jax.Array] = None    # liveness *before* the delta
+    assignment: Optional[jax.Array] = None   # current labels
+    occupancy: Optional[jax.Array] = None    # (k,) live vertices per partition
+    capacity: Optional[jax.Array] = None     # (k,) hard capacities
+    rng: Optional[jax.Array] = None          # fresh subkey for this call
+    # out-parameter
+    placed: Optional[int] = None
+
+
+@runtime_checkable
+class PartitionStrategy(Protocol):
+    """Structural protocol — anything with these hooks plugs into the system."""
+
+    name: str
+
+    def init(self, graph: Graph, k: int) -> jax.Array: ...
+
+    def place(self, delta: GraphDelta, ctx: StrategyContext) -> jax.Array: ...
+
+    def adapt(self, graph: Graph, state: PartitionState,
+              ctx: StrategyContext) -> PartitionState: ...
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., "StrategyBase"]] = {}
+
+
+def register_strategy(name: str, *aliases: str
+                      ) -> Callable[[Callable[..., Any]], Callable[..., Any]]:
+    """Class decorator: register a strategy factory under ``name`` (+aliases)."""
+
+    def deco(factory: Callable[..., Any]) -> Callable[..., Any]:
+        for key in (name, *aliases):
+            if key in _REGISTRY:
+                raise ValueError(f"strategy name {key!r} already registered")
+            _REGISTRY[key] = factory
+        return factory
+
+    return deco
+
+
+def strategy_names() -> Tuple[str, ...]:
+    """Every registered name, aliases included, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_strategy(spec: Any, **kwargs: Any) -> "StrategyBase":
+    """Turn a registry name, strategy class, or instance into an instance.
+
+    Unknown names raise a ``ValueError`` that lists the registered names —
+    a typo should cost seconds, not a debugging session.
+    """
+    if isinstance(spec, str):
+        try:
+            factory = _REGISTRY[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown partition strategy {spec!r}; registered strategies: "
+                f"{', '.join(strategy_names())}") from None
+        return factory(**kwargs)
+    if isinstance(spec, type):
+        return spec(**kwargs)
+    if kwargs:
+        raise TypeError(f"cannot apply kwargs {sorted(kwargs)} to an already-"
+                        f"constructed strategy instance {spec!r}")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Concrete strategies
+# ---------------------------------------------------------------------------
+
+class StrategyBase:
+    """Default behaviour: hash init, arrivals inherit their padded-slot
+    label, and no adaptation. Subclasses override the hooks they care about."""
+
+    name = "base"
+
+    def init(self, graph: Graph, k: int) -> jax.Array:
+        return hash_partition(graph, k)
+
+    def place(self, delta: GraphDelta, ctx: StrategyContext) -> jax.Array:
+        return ctx.assignment
+
+    def adapt(self, graph: Graph, state: PartitionState,
+              ctx: StrategyContext) -> PartitionState:
+        return state
+
+    def converge(self, graph: Graph, state: PartitionState,
+                 ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        return state, History.empty()
+
+    def adapt_rounds(self, graph: Graph, state: PartitionState, iters: int,
+                     ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        return state, History.empty()
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+@register_strategy("static")
+class Static(StrategyBase):
+    """The no-op baseline: hash init, inherited placement, zero adaptation.
+    Swapping ``xdgp`` for ``static`` in ``SystemConfig.partition.strategy``
+    is the paper's adaptive-vs-static-hash comparison."""
+
+    name = "static"
+
+
+@register_strategy("hash", "hsh")
+class Hash(StrategyBase):
+    """HSH: H(v) mod k (paper §5.2.1) — the de-facto standard; scatters."""
+
+    name = "hash"
+
+
+@register_strategy("random", "rnd")
+class Random(StrategyBase):
+    """RND: balanced pseudorandom assignment."""
+
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def init(self, graph: Graph, k: int) -> jax.Array:
+        return random_partition(graph, k, seed=self.seed)
+
+
+@register_strategy("modulo", "mod")
+class Modulo(StrategyBase):
+    """v mod k without mixing — keeps sequential locality; for ablations."""
+
+    name = "modulo"
+
+    def init(self, graph: Graph, k: int) -> jax.Array:
+        return modulo_partition(graph, k)
+
+
+@register_strategy("block", "blk")
+class Block(StrategyBase):
+    """Contiguous id blocks (what a range-sharded store would do)."""
+
+    name = "block"
+
+    def init(self, graph: Graph, k: int) -> jax.Array:
+        return block_partition(graph, k)
+
+
+@register_strategy("dgr")
+class Dgr(StrategyBase):
+    """DGR: Stanton & Kliot linear deterministic greedy (streaming init)."""
+
+    name = "dgr"
+
+    def __init__(self, slack: float = 0.1):
+        self.slack = slack
+
+    def init(self, graph: Graph, k: int) -> jax.Array:
+        return deterministic_greedy(graph, k, slack=self.slack)
+
+
+@register_strategy("mnn")
+class Mnn(StrategyBase):
+    """MNN: minimum number of neighbours (Prabhakaran et al., streaming init)."""
+
+    name = "mnn"
+
+    def __init__(self, slack: float = 0.1):
+        self.slack = slack
+
+    def init(self, graph: Graph, k: int) -> jax.Array:
+        return min_neighbours(graph, k, slack=self.slack)
+
+
+@register_strategy("fennel", "online")
+class OnlineFennel(StrategyBase):
+    """Online Fennel/DGR placement of arriving vertices, no adaptation.
+
+    score(v, j) = |N(v) ∩ P_j| · (1 − occ_j / C_j), computed from the
+    delta's own edges only — one fused jit program (see
+    ``repro.stream.placement``).
+    """
+
+    name = "fennel"
+
+    def __init__(self, passes: Optional[int] = None):
+        self.passes = passes            # None = take ctx.placement_passes
+
+    def place(self, delta: GraphDelta, ctx: StrategyContext) -> jax.Array:
+        passes = self.passes if self.passes is not None else ctx.placement_passes
+        labels, stats = place_delta(
+            delta, ctx.node_mask, ctx.assignment, ctx.occupancy,
+            ctx.capacity, ctx.rng, k=ctx.k, passes=passes)
+        ctx.placed = int(stats.placed)
+        return labels
+
+
+@register_strategy("xdgp", "adaptive")
+class XdgpAdaptive(OnlineFennel):
+    """The full xDGP policy: online placement of arrivals + interleaved
+    greedy vertex migration (paper §3), run to convergence on demand.
+
+    ``placement="inherit"`` keeps arrivals on their padded-slot hash label
+    (the seed behaviour) while still adapting — useful for ablating what
+    online placement itself buys.
+    """
+
+    name = "xdgp"
+
+    def __init__(self, placement: str = "online", passes: Optional[int] = None):
+        if placement not in ("online", "inherit"):
+            raise ValueError(f"placement must be 'online' or 'inherit', "
+                             f"got {placement!r}")
+        super().__init__(passes=passes)
+        self.placement = placement
+        self._adapt_cache: Dict[Tuple[float, int, str], Callable] = {}
+
+    def place(self, delta: GraphDelta, ctx: StrategyContext) -> jax.Array:
+        if self.placement == "inherit":
+            return ctx.assignment
+        return super().place(delta, ctx)
+
+    def adapt(self, graph: Graph, state: PartitionState,
+              ctx: StrategyContext) -> PartitionState:
+        key = (ctx.s, ctx.adapt_iters, ctx.tie_break)
+        fn = self._adapt_cache.get(key)
+        if fn is None:
+            s, iters, tie_break = key
+            fn = jax.jit(lambda g, st: adapt_jit(g, st, s=s, iters=iters,
+                                                 tie_break=tie_break))
+            self._adapt_cache[key] = fn
+        return fn(graph, state)
+
+    def converge(self, graph: Graph, state: PartitionState,
+                 ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        return run_to_convergence(
+            graph, state, s=ctx.s, patience=ctx.patience,
+            max_iters=ctx.max_iters, tie_break=ctx.tie_break,
+            rel_tol=ctx.rel_tol, record_history=ctx.record_history)
+
+    def adapt_rounds(self, graph: Graph, state: PartitionState, iters: int,
+                     ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        return adapt_rounds(graph, state, iters, s=ctx.s,
+                            tie_break=ctx.tie_break,
+                            record_history=ctx.record_history)

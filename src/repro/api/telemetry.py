@@ -1,0 +1,48 @@
+"""Per-superstep telemetry — the record every front door emits.
+
+Lives in its own leaf module (no repro imports) so both the session
+(``repro.api.system``) and the deprecated ``StreamEngine`` shim
+(``repro.stream.engine``) can share the one dataclass without an import
+cycle between the api and stream packages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class SuperstepRecord:
+    """Telemetry for one system superstep."""
+
+    superstep: int
+    now: int                   # stream time at the end of the batch
+    events: int                # events offered this superstep
+    adds: int                  # edge additions released into the graph
+    dels: int                  # node expiries released
+    backlog_adds: int          # additions held back by a_cap backpressure
+    backlog_dels: int
+    invalid_events: int        # events rejected at ingest (ids out of range)
+    stale_dropped: int         # backlogged changes invalidated by window movement
+    new_placed: int            # vertices placed online this superstep
+    migrations: int            # vertices moved by the adaptation rounds
+    cut_edges: int
+    live_edges: int
+    cut_ratio: float
+    imbalance: float
+    ingest_seconds: float      # delta construction (the streaming front end)
+    step_seconds: float        # full superstep wall clock
+    drift: Optional[float]     # set on drift-check supersteps (must be 0.0)
+    dup_dropped: int = 0       # additions dropped as already-live (dedupe mode)
+    local_bytes: int = 0       # program message traffic staying intra-partition
+    remote_bytes: int = 0      # program message traffic crossing partitions
+    compute_seconds: float = 0.0  # vertex-program superstep wall clock
+
+    @property
+    def events_per_second(self) -> float:
+        return self.events / max(self.ingest_seconds, 1e-12)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["events_per_second"] = self.events_per_second
+        return d

@@ -6,11 +6,13 @@ from repro.core.migration import (MigrationStats, flush_pending,
                                   neighbour_partition_counts)
 from repro.core.initial import STRATEGIES, initial_partition
 from repro.core.repartitioner import (AdaptiveConfig, AdaptivePartitioner,
-                                      History, converge_jit)
+                                      History, adapt_jit, adapt_rounds,
+                                      converge_jit, run_to_convergence)
 
 __all__ = [
     "PartitionState", "default_capacity", "imbalance", "make_state", "occupancy",
     "MigrationStats", "flush_pending", "greedy_targets", "migrate_step",
     "neighbour_partition_counts", "STRATEGIES", "initial_partition",
-    "AdaptiveConfig", "AdaptivePartitioner", "History", "converge_jit",
+    "AdaptiveConfig", "AdaptivePartitioner", "History",
+    "adapt_jit", "adapt_rounds", "converge_jit", "run_to_convergence",
 ]

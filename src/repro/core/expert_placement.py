@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition_state import make_state
-from repro.core.repartitioner import AdaptiveConfig, AdaptivePartitioner
+from repro.core.repartitioner import adapt_rounds
 from repro.graph.structure import Graph, from_edges
 
 
@@ -70,16 +70,13 @@ def place_experts(expert_choices: np.ndarray, n_experts: int, n_devices: int,
     per = n_experts // n_devices
     # initial: contiguous blocks (the default layout)
     init = (np.arange(n_experts) // per).astype(np.int32)
-    part = AdaptivePartitioner(AdaptiveConfig(
-        k=n_devices, s=0.5, max_iters=adapt_iters,
-        patience=adapt_iters, seed=seed))
     # soft capacity during adaptation: quotas are floor(free/(k-1)), so the
     # head-room must be at least k-1 for any move to be admitted; the
     # fix-up below restores exact balance afterwards
     cap = per + max(n_devices - 1, per // 4)
     state = make_state(g, jnp.asarray(init), n_devices, seed=seed,
                        capacity=jnp.full((n_devices,), cap, jnp.int32))
-    state, hist = part.adapt(g, state, adapt_iters)
+    state, hist = adapt_rounds(g, state, adapt_iters)
     placement = np.asarray(state.assignment)[:n_experts].copy()
     # hard fix-up: enforce exact per-device count (move overflow greedily)
     counts = np.bincount(placement, minlength=n_devices)

@@ -43,17 +43,13 @@ def measure_boundary_fraction(n: int, avg_degree: float, k: int,
     the xDGP heuristic for ``adapt_iters`` iterations.
     """
     from repro.graph import generators
-    from repro.core import (AdaptiveConfig, AdaptivePartitioner,
-                            initial_partition)
+    from repro.core import adapt_rounds, initial_partition, make_state
 
     g = generators.chung_lu(n, avg_degree, seed=seed)
     lab = initial_partition(g, k, "hsh")
     if strategy == "adapted":
-        part = AdaptivePartitioner(AdaptiveConfig(k=k, s=0.5,
-                                                  max_iters=adapt_iters,
-                                                  patience=adapt_iters))
-        state = part.init_state(g, lab)
-        state, _ = part.adapt(g, state, adapt_iters)
+        state = make_state(g, lab, k)
+        state, _ = adapt_rounds(g, state, adapt_iters)
         lab = state.assignment
     lab_np = np.asarray(lab)
     src = np.asarray(g.src)

@@ -108,6 +108,10 @@ def min_neighbours(graph: Graph, k: int, slack: float = 0.1) -> jnp.ndarray:
     return _streaming(graph, k, "mnn", slack)
 
 
+# Legacy name → function map, kept for direct callers; ``initial_partition``
+# itself now resolves through the ``repro.api`` strategy registry, so every
+# registered ``PartitionStrategy`` (including user-defined ones) is reachable
+# from the seed-era entry point too.
 STRATEGIES = {
     "hsh": hash_partition,
     "rnd": random_partition,
@@ -119,4 +123,13 @@ STRATEGIES = {
 
 
 def initial_partition(graph: Graph, k: int, strategy: str = "hsh", **kw) -> jnp.ndarray:
-    return STRATEGIES[strategy](graph, k, **kw)
+    """Initial labels for ``graph`` under a named strategy.
+
+    ``strategy`` is resolved through the ``repro.api`` registry (an unknown
+    name raises a ``ValueError`` listing every registered strategy); extra
+    keyword arguments are forwarded to the strategy constructor
+    (e.g. ``seed=`` for ``rnd``, ``slack=`` for ``dgr``/``mnn``).
+    """
+    # imported lazily: the api layer is built on top of repro.core
+    from repro.api.strategy import resolve_strategy
+    return resolve_strategy(strategy, **kw).init(graph, k)

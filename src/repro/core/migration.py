@@ -169,8 +169,8 @@ def migrate_step(state: PartitionState, graph: Graph, *, s: float = 0.5,
                                      admitted=n_admitted)
 
 
-@partial(jax.jit, static_argnames=("s",))
-def flush_pending(state: PartitionState, graph: Graph, *, s: float = 0.5) -> PartitionState:
+@jax.jit
+def flush_pending(state: PartitionState, graph: Graph) -> PartitionState:
     """Commit any pending moves without taking new decisions (used at drain)."""
     has_pending = state.pending >= 0
     assignment = jnp.where(has_pending, state.pending, state.assignment)

@@ -1,14 +1,21 @@
-"""Run-to-convergence driver for the adaptive heuristic (paper §3, Fig. 2/6).
+"""Run-to-convergence drivers for the adaptive heuristic (paper §3, Fig. 2/6).
 
 The paper's convergence criterion: zero migrations for 30 consecutive
-iterations. The driver is a host loop around the jit'd ``migrate_step`` so we
-can record per-iteration history (cut ratio, migrations) exactly like the
-paper's figures; a pure ``lax.while_loop`` variant is provided for embedding
-the adaptation inside larger jit programs (the distributed engine uses it).
+iterations. ``run_to_convergence`` is a host loop around the jit'd
+``migrate_step`` so we can record per-iteration history (cut ratio,
+migrations) exactly like the paper's figures; ``adapt_rounds`` runs a fixed
+number of iterations (continuous mode); ``converge_jit`` is a pure
+``lax.while_loop`` variant for embedding the adaptation inside larger jit
+programs (the distributed engine uses it).
+
+These module-level functions are the implementation behind the
+``XdgpAdaptive`` strategy in ``repro.api``. ``AdaptivePartitioner`` remains
+as a deprecated shim over them for seed-era callers.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -51,11 +58,89 @@ class History:
     def iterations(self) -> int:
         return len(self.migrations)
 
+    @staticmethod
+    def empty() -> "History":
+        return History([], [], [], [])
+
+
+def run_to_convergence(graph: Graph, state: PartitionState, *, s: float = 0.5,
+                       patience: int = 30, max_iters: int = 500,
+                       tie_break: str = "random", rel_tol: float = 1e-3,
+                       chunked_counts: bool = False,
+                       record_history: bool = True,
+                       ) -> Tuple[PartitionState, History]:
+    """Iterate until converged.
+
+    Convergence: tie_break="stay" → zero migrations for ``patience``
+    consecutive iterations (the paper's criterion). tie_break="random" →
+    tied boundaries keep fluctuating forever, so we additionally stop when
+    the cut ratio has not improved by ``rel_tol`` over a ``patience``
+    iteration window.
+    """
+    hist = History.empty()
+    quiet = 0
+    best_cut = float("inf")
+    stale = 0
+    for _ in range(max_iters):
+        state, stats = migrate_step(state, graph, s=s,
+                                    use_chunked_counts=chunked_counts,
+                                    tie_break=tie_break)
+        moved = int(stats.committed)
+        pending = int(stats.admitted)
+        cut = float(cut_ratio(graph, state.assignment))
+        if record_history:
+            hist.cut_ratio.append(cut)
+            hist.migrations.append(moved)
+            hist.willing.append(int(stats.willing))
+            hist.imbalance.append(float(imbalance(state, graph.node_mask)))
+        quiet = quiet + 1 if (moved == 0 and pending == 0) else 0
+        if cut < best_cut * (1.0 - rel_tol):
+            best_cut = cut
+            stale = 0
+        else:
+            stale += 1
+        if quiet >= patience:
+            break
+        if tie_break == "random" and stale >= patience:
+            break
+    state = flush_pending(state, graph)
+    return state, hist
+
+
+def adapt_rounds(graph: Graph, state: PartitionState, iters: int, *,
+                 s: float = 0.5, tie_break: str = "random",
+                 chunked_counts: bool = False,
+                 record_history: bool = True,
+                 ) -> Tuple[PartitionState, History]:
+    """Run a fixed number of adaptation iterations (continuous mode).
+
+    Pending moves stay deferred at return (paper §4.2) — the next call's
+    first iteration commits them, exactly like the interleaved stream mode.
+    """
+    hist = History.empty()
+    for _ in range(iters):
+        state, stats = migrate_step(state, graph, s=s,
+                                    use_chunked_counts=chunked_counts,
+                                    tie_break=tie_break)
+        if record_history:
+            hist.cut_ratio.append(float(cut_ratio(graph, state.assignment)))
+            hist.migrations.append(int(stats.committed))
+            hist.willing.append(int(stats.willing))
+            hist.imbalance.append(float(imbalance(state, graph.node_mask)))
+    return state, hist
+
 
 class AdaptivePartitioner:
-    """The xDGP repartitioner: owns config, exposes step / converge / adapt."""
+    """Deprecated seed-era driver; use ``repro.api.DynamicGraphSystem`` (or
+    the ``XdgpAdaptive`` strategy / the module-level driver functions)."""
 
     def __init__(self, config: AdaptiveConfig):
+        warnings.warn(
+            "AdaptivePartitioner is deprecated; use "
+            "repro.api.DynamicGraphSystem (converge()/adapt()) with the "
+            "'xdgp' PartitionStrategy, or the module-level "
+            "run_to_convergence/adapt_rounds drivers",
+            DeprecationWarning, stacklevel=2)
         self.config = config
 
     def init_state(self, graph: Graph, assignment: jax.Array,
@@ -73,57 +158,19 @@ class AdaptivePartitioner:
     def run_to_convergence(self, graph: Graph, state: PartitionState,
                            record_history: bool = True,
                            ) -> Tuple[PartitionState, History]:
-        """Iterate until converged.
-
-        Convergence: tie_break="stay" → zero migrations for ``patience``
-        consecutive iterations (the paper's criterion). tie_break="random" →
-        tied boundaries keep fluctuating forever, so we additionally stop when
-        the cut ratio has not improved by ``rel_tol`` over a ``patience``
-        iteration window.
-        """
         cfg = self.config
-        hist = History([], [], [], [])
-        quiet = 0
-        best_cut = float("inf")
-        stale = 0
-        for _ in range(cfg.max_iters):
-            state, stats = migrate_step(state, graph, s=cfg.s,
-                                        use_chunked_counts=cfg.chunked_counts,
-                                        tie_break=cfg.tie_break)
-            moved = int(stats.committed)
-            pending = int(stats.admitted)
-            cut = float(cut_ratio(graph, state.assignment))
-            if record_history:
-                hist.cut_ratio.append(cut)
-                hist.migrations.append(moved)
-                hist.willing.append(int(stats.willing))
-                hist.imbalance.append(float(imbalance(state, graph.node_mask)))
-            quiet = quiet + 1 if (moved == 0 and pending == 0) else 0
-            if cut < best_cut * (1.0 - cfg.rel_tol):
-                best_cut = cut
-                stale = 0
-            else:
-                stale += 1
-            if quiet >= cfg.patience:
-                break
-            if cfg.tie_break == "random" and stale >= cfg.patience:
-                break
-        state = flush_pending(state, graph, s=cfg.s)
-        return state, hist
+        return run_to_convergence(
+            graph, state, s=cfg.s, patience=cfg.patience,
+            max_iters=cfg.max_iters, tie_break=cfg.tie_break,
+            rel_tol=cfg.rel_tol, chunked_counts=cfg.chunked_counts,
+            record_history=record_history)
 
     def adapt(self, graph: Graph, state: PartitionState, iters: int,
               ) -> Tuple[PartitionState, History]:
-        """Run a fixed number of adaptation iterations (continuous mode)."""
-        hist = History([], [], [], [])
-        for _ in range(iters):
-            state, stats = migrate_step(state, graph, s=self.config.s,
-                                        use_chunked_counts=self.config.chunked_counts,
-                                        tie_break=self.config.tie_break)
-            hist.cut_ratio.append(float(cut_ratio(graph, state.assignment)))
-            hist.migrations.append(int(stats.committed))
-            hist.willing.append(int(stats.willing))
-            hist.imbalance.append(float(imbalance(state, graph.node_mask)))
-        return state, hist
+        cfg = self.config
+        return adapt_rounds(graph, state, iters, s=cfg.s,
+                            tie_break=cfg.tie_break,
+                            chunked_counts=cfg.chunked_counts)
 
 
 def converge_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
@@ -149,7 +196,7 @@ def converge_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
 
     state, _, _ = jax.lax.while_loop(
         cond, body, (state, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
-    return flush_pending(state, graph, s=s)
+    return flush_pending(state, graph)
 
 
 def adapt_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
@@ -161,4 +208,4 @@ def adapt_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
         return st, stats.committed
 
     state, _ = jax.lax.scan(body, state, None, length=iters)
-    return flush_pending(state, graph, s=s)
+    return flush_pending(state, graph)

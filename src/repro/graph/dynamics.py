@@ -12,6 +12,8 @@ accounting on top of this ingestion path.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro.graph.structure import Graph, GraphDelta, apply_delta
@@ -23,6 +25,14 @@ __all__ = ["ChangeQueue", "SlidingWindowGraph", "stream_batches"]
 
 class ChangeQueue(EdgeStreamBuffer):
     """Host-side buffer of pending topology changes (seed-compatible API)."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "ChangeQueue is deprecated; push batches into "
+            "repro.stream.EdgeStreamBuffer directly, or drive the full loop "
+            "via repro.api.DynamicGraphSystem.step",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)
 
     def add_edge(self, u: int, v: int) -> None:
         self.push_edges(np.asarray([u]), np.asarray([v]))
@@ -47,6 +57,12 @@ class SlidingWindowGraph:
 
     def __init__(self, graph: Graph, window: int, a_cap: int = 8192,
                  d_cap: int = 4096):
+        warnings.warn(
+            "SlidingWindowGraph is deprecated; use "
+            "repro.api.DynamicGraphSystem (step/run) — it adds online "
+            "placement, adaptation and incremental quality tracking on the "
+            "same windowed-ingest path",
+            DeprecationWarning, stacklevel=2)
         self.graph = graph
         self.window = window
         self.a_cap = a_cap

@@ -153,6 +153,10 @@ def apply_delta(graph: Graph, delta: GraphDelta) -> Graph:
 
     # --- edge additions into free slots ----------------------------------
     a_cap = delta.add_mask.shape[0]
+    if a_cap == 0:      # static shape: a zero-capacity delta adds nothing
+        return Graph(src=jnp.where(e_alive, graph.src, -1),
+                     dst=jnp.where(e_alive, graph.dst, -1),
+                     node_mask=node_mask, edge_mask=e_alive)
     free = ~e_alive                                      # (e_cap,) free slots
     # the r-th valid addition goes into the r-th free slot
     free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1   # rank of slot s

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.graph.structure import Graph, cut_ratio
 from repro.core.partition_state import PartitionState, default_capacity, make_state
-from repro.core.repartitioner import AdaptiveConfig, AdaptivePartitioner, History
+from repro.core.repartitioner import History, adapt_rounds
 
 
 def rescale_assignment(assignment: jax.Array, old_k: int, new_k: int,
@@ -55,11 +55,8 @@ def elastic_rescale(graph: Graph, assignment: jax.Array, old_k: int,
     history, report) with before/after cut ratios."""
     a0 = rescale_assignment(assignment, old_k, new_k, lost)
     cut_before = float(cut_ratio(graph, a0))
-    cfg = AdaptiveConfig(k=new_k, max_iters=adapt_iters, patience=adapt_iters,
-                         seed=seed)
-    part = AdaptivePartitioner(cfg)
-    state = part.init_state(graph, a0)
-    state, hist = part.adapt(graph, state, adapt_iters)
+    state = make_state(graph, a0, new_k, seed=seed)
+    state, hist = adapt_rounds(graph, state, adapt_iters)
     cut_after = float(cut_ratio(graph, state.assignment))
     report = {"old_k": old_k, "new_k": new_k,
               "cut_after_rehash": cut_before, "cut_after_adapt": cut_after,

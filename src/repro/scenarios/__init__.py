@@ -1,7 +1,8 @@
 """Paper-scenario workload suite (§5.3): three real-world dynamic workloads
-driven end to end through the StreamEngine with compute interleaved —
-Twitter mentions + TunkRank, an adaptively refined FEM mesh, and a
-mobile/cellular call graph with user-movement churn."""
+driven end to end through ``repro.api.DynamicGraphSystem`` with compute
+interleaved — Twitter mentions + TunkRank, an adaptively refined FEM mesh,
+and a mobile/cellular call graph with user-movement churn. A ``Scenario``
+is itself a valid ``stream`` for ``DynamicGraphSystem.run``/``compare``."""
 from repro.scenarios.base import Scenario, empty_graph
 from repro.scenarios import cellular, fem, twitter
 from repro.scenarios.harness import (CostModel, bsr_snapshot, compare_scenario,

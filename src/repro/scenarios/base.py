@@ -1,11 +1,14 @@
 """Scenario contract for the paper's real-world dynamic workloads (§5.3).
 
 A ``Scenario`` bundles everything needed to drive one workload end to end
-through the ``StreamEngine``: an initial padded graph, a ``(t, src, dst)``
-event stream, the windowing/batching parameters, and the vertex program the
-paper runs on that workload. The harness (``repro.scenarios.harness``) runs
-the same scenario under adaptive and static-hash partitioning and compares
-the per-superstep execution-cost proxy.
+through ``repro.api.DynamicGraphSystem``: an initial padded graph, a
+``(t, src, dst)`` event stream, the windowing/batching parameters, and the
+vertex program the paper runs on that workload. Because it exposes
+``times``/``src``/``dst``/``batch_span``, a scenario is itself a valid
+``stream`` argument for ``DynamicGraphSystem.run``/``compare``;
+``system_config()`` produces the matching ``SystemConfig`` with the system
+under test (``xdgp``) as the strategy — the harness compares it against
+``static`` by swapping that one field.
 
 Every driver is deterministic under its seed, so the scenario regression
 tests and the e2e benchmark replay identical streams.
@@ -15,24 +18,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (ComputeSection, GraphSection, PartitionSection,
+                       StreamSection, SystemConfig, TelemetrySection,
+                       empty_graph)
 from repro.graph.structure import Graph
 from repro.stream.engine import StreamConfig
 
-
-def empty_graph(n_cap: int, e_cap: int) -> Graph:
-    """All-padding graph: the stream grows it from nothing."""
-    return Graph(src=jnp.full((e_cap,), -1, jnp.int32),
-                 dst=jnp.full((e_cap,), -1, jnp.int32),
-                 node_mask=jnp.zeros((n_cap,), bool),
-                 edge_mask=jnp.zeros((e_cap,), bool))
+__all__ = ["Scenario", "empty_graph"]
 
 
 @dataclasses.dataclass
 class Scenario:
-    """One reproducible dynamic workload, ready for ``StreamEngine.run_stream``."""
+    """One reproducible dynamic workload, ready for ``DynamicGraphSystem.run``."""
 
     name: str
     program: str              # key into core.vertex_program.PROGRAMS
@@ -63,16 +62,32 @@ class Scenario:
         span = int(t.max()) - int(t.min())
         return span // self.batch_span + 1
 
+    def system_config(self, *, strategy: str = "xdgp",
+                      seed: Optional[int] = None,
+                      recompute_every: int = 8) -> SystemConfig:
+        """The session config for this scenario.
+
+        ``strategy="xdgp"`` is the system under test (online placement of
+        arrivals + interleaved migration); swapping the field to
+        ``"static"`` yields the paper's static-hash baseline — no other
+        change anywhere.
+        """
+        return SystemConfig(
+            graph=GraphSection(n_cap=self.graph.n_cap, e_cap=self.graph.e_cap),
+            stream=StreamSection(window=self.window,
+                                 batch_span=self.batch_span,
+                                 a_cap=self.a_cap, d_cap=self.d_cap,
+                                 dedupe=True),
+            partition=PartitionSection(strategy=strategy, k=self.k,
+                                       adapt_iters=self.adapt_iters),
+            compute=ComputeSection(program=self.program,
+                                   payload_scale=self.payload_scale),
+            telemetry=TelemetrySection(recompute_every=recompute_every),
+            seed=self.seed if seed is None else seed)
+
     def stream_config(self, *, adaptive: bool, seed: Optional[int] = None,
                       recompute_every: int = 8) -> StreamConfig:
-        """Engine config for this scenario.
-
-        adaptive=True  → online placement of arrivals + interleaved xDGP
-                         migration rounds (the system under test).
-        adaptive=False → static hash partitioning: arrivals inherit the
-                         padded-slot hash, zero adaptation (the baseline the
-                         paper compares against).
-        """
+        """Seed-era flat config (kept for the ``StreamEngine`` shim path)."""
         return StreamConfig(
             k=self.k, window=self.window,
             a_cap=self.a_cap, d_cap=self.d_cap,

@@ -1,9 +1,10 @@
 """Compute-coupled scenario evaluation: adaptive vs. static-hash partitioning.
 
-Runs a ``Scenario`` end to end through the ``StreamEngine`` with its vertex
-program executing every superstep, twice — once with online placement +
-interleaved xDGP adaptation, once with static hash partitioning and zero
-adaptation — and compares the per-superstep execution-cost proxy:
+Thin wrapper over the ``repro.api`` front door: a ``Scenario`` is a valid
+``stream`` for ``DynamicGraphSystem``, and the adaptive-vs-baseline dual run
+(identical streams, execution-cost scoring, BSR snapshot) is
+``DynamicGraphSystem.compare`` — the strategy swap ``xdgp`` ↔ ``static`` in
+one ``SystemConfig`` field is the whole comparison:
 
   cost(step) = c_cpu · local_bytes + c_net · remote_bytes
                + c_mig · migrations · unit_bytes
@@ -12,95 +13,35 @@ c_net/c_cpu = 25 models the paper's §5.3 observation that cross-partition
 messages dominate iteration time (>80%); the migration term charges the
 adaptive run for its own overhead so the comparison is end to end, like the
 paper's ">50% execution time reduction" claim. A BSR snapshot of the final
-graph (vertices relabelled by partition, ``graph_to_bsr`` +
-``bsr_density_stats``) adds the TPU-locality view: fewer nonzero tiles ⇒
-proportionally less SpMM compute/DMA (DESIGN.md §2).
+graph (vertices relabelled by partition) adds the TPU-locality view: fewer
+nonzero tiles ⇒ proportionally less SpMM compute/DMA (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, Optional
 
-import numpy as np
-
-from repro.core.vertex_program import CostModel, make_program
-from repro.graph.bsr import bsr_density_stats, graph_to_bsr
-from repro.graph.structure import Graph, from_edges
+from repro.api import DynamicGraphSystem, bsr_snapshot, partition_relabelled
+from repro.core.vertex_program import CostModel
 from repro.scenarios.base import Scenario
-from repro.stream.engine import StreamEngine
+
+__all__ = ["CostModel", "bsr_snapshot", "compare_scenario",
+           "partition_relabelled", "run_scenario"]
 
 
-def partition_relabelled(graph: Graph, assignment) -> Optional[Graph]:
-    """Relabel live vertices grouped by partition (the relocation step that
-    turns partition quality into BSR tile locality)."""
-    nm = np.asarray(graph.node_mask)
-    em = np.asarray(graph.edge_mask)
-    lab = np.asarray(assignment)
-    live = np.flatnonzero(nm)
-    if live.size == 0 or not em.any():
-        return None
-    order = live[np.argsort(lab[live], kind="stable")]
-    new_id = np.full(graph.n_cap, -1, np.int64)
-    new_id[order] = np.arange(live.size)
-    s = new_id[np.asarray(graph.src)[em]]
-    d = new_id[np.asarray(graph.dst)[em]]
-    return from_edges(s, d, live.size)
-
-
-def bsr_snapshot(graph: Graph, assignment, blk: int = 32) -> Dict:
-    """Tile stats of the partition-relabelled adjacency (kernel-cost proxy)."""
-    relab = partition_relabelled(graph, assignment)
-    if relab is None:      # no live vertices/edges: same shape as the
-        return {"nnzb": 0, "diag_frac": 1.0, "mean_band": 0.0,  # empty branch
-                "tiles_per_row": 0.0}                 # of bsr_density_stats
-    return bsr_density_stats(graph_to_bsr(relab, blk=blk))
+def _system(scn: Scenario, *, strategy: str,
+            seed: Optional[int] = None) -> DynamicGraphSystem:
+    return DynamicGraphSystem(scn.graph,
+                              scn.system_config(strategy=strategy, seed=seed))
 
 
 def run_scenario(scn: Scenario, *, adaptive: bool,
                  max_supersteps: Optional[int] = None, bsr_blk: int = 32,
                  cost: Optional[CostModel] = None, seed: Optional[int] = None,
                  ) -> Dict:
-    """Drive the scenario through the engine; return the measured run row."""
-    cost = cost or CostModel()
-    prog = make_program(scn.program)
-    cfg = scn.stream_config(adaptive=adaptive, seed=seed)
-    eng = StreamEngine(scn.graph, cfg, program=prog)
-    t0 = time.perf_counter()
-    recs = eng.run_stream(np.asarray(scn.times), np.asarray(scn.src),
-                          np.asarray(scn.dst), scn.batch_span,
-                          max_supersteps=max_supersteps)
-    wall = time.perf_counter() - t0
-    drifts = [r.drift for r in recs if r.drift is not None]
-    if any(d != 0.0 for d in drifts):     # survives python -O, unlike assert
-        raise RuntimeError(f"quality tracker drifted: {drifts}")
-
-    unit = prog.state_dim * 4 * scn.payload_scale
-    local = sum(r.local_bytes for r in recs) * scn.payload_scale
-    remote = sum(r.remote_bytes for r in recs) * scn.payload_scale
-    migrations = sum(r.migrations for r in recs)
-    per_step = [cost.superstep_cost(r.local_bytes * scn.payload_scale,
-                                    r.remote_bytes * scn.payload_scale,
-                                    r.migrations, unit) for r in recs]
-    total = float(np.sum(per_step))
-    return {
-        "mode": "adaptive" if adaptive else "static_hash",
-        "supersteps": len(recs),
-        "events": int(sum(r.events for r in recs)),
-        "cut_final": float(recs[-1].cut_ratio),
-        "cut_mean": float(np.mean([r.cut_ratio for r in recs])),
-        "imbalance_final": float(recs[-1].imbalance),
-        "migrations_total": int(migrations),
-        "placed_total": int(sum(r.new_placed for r in recs)),
-        "local_bytes": float(local),
-        "remote_bytes": float(remote),
-        "exec_cost_total": total,
-        "exec_cost_per_superstep": total / max(len(recs), 1),
-        "adaptation_cost": float(cost.c_mig * migrations * unit),
-        "compute_seconds": float(sum(r.compute_seconds for r in recs)),
-        "wall_seconds": float(wall),
-        "bsr": bsr_snapshot(eng.graph, eng.state.assignment, blk=bsr_blk),
-        "cut_trajectory": [round(float(r.cut_ratio), 4) for r in recs],
-    }
+    """Drive the scenario through the system; return the measured run row."""
+    system = _system(scn, strategy="xdgp" if adaptive else "static", seed=seed)
+    system.run(scn, max_supersteps=max_supersteps)
+    return system.score(cost=cost, bsr_blk=bsr_blk)
 
 
 def compare_scenario(scn: Scenario, *, max_supersteps: Optional[int] = None,
@@ -108,32 +49,10 @@ def compare_scenario(scn: Scenario, *, max_supersteps: Optional[int] = None,
                      seed: Optional[int] = None) -> Dict:
     """Adaptive vs. static-hash on the identical stream (paper's comparison).
 
-    ``seed`` varies the engine's own randomness (placement tie noise,
+    ``seed`` varies the system's own randomness (placement tie noise,
     migration damping) independently of the stream, which stays pinned to
     the scenario's seed."""
-    adaptive = run_scenario(scn, adaptive=True, max_supersteps=max_supersteps,
-                            bsr_blk=bsr_blk, cost=cost, seed=seed)
-    static = run_scenario(scn, adaptive=False, max_supersteps=max_supersteps,
-                          bsr_blk=bsr_blk, cost=cost, seed=seed)
-    s_cost = max(static["exec_cost_total"], 1e-12)
-    reduction = 1.0 - adaptive["exec_cost_total"] / s_cost
-    s_tiles = max(static["bsr"]["nnzb"], 1)
-    return {
-        "scenario": scn.name,
-        "program": scn.program,
-        "k": scn.k,
-        "events": scn.n_events,
-        "notes": scn.notes,
-        "adaptive": adaptive,
-        "static": static,
-        "exec_cost_reduction_pct":
-            round(100 * reduction, 1),
-        "remote_reduction_pct":
-            round(100 * (1 - adaptive["remote_bytes"]
-                         / max(static["remote_bytes"], 1e-12)), 1),
-        "cut_improvement":
-            round(1 - adaptive["cut_final"] / max(static["cut_final"], 1e-12), 3),
-        "bsr_tile_reduction_pct":
-            round(100 * (1 - adaptive["bsr"]["nnzb"] / s_tiles), 1),
-        "meets_50pct_claim": bool(reduction > 0.5),
-    }
+    system = _system(scn, strategy="xdgp", seed=seed)
+    return system.compare(scn, baseline="static",
+                          max_supersteps=max_supersteps, bsr_blk=bsr_blk,
+                          cost=cost)

@@ -1,55 +1,37 @@
-"""StreamEngine: the ingest → place → adapt → measure production loop.
+"""Deprecated streaming front end — a thin shim over ``repro.api``.
 
-One object owns the full dynamic-graph serving path:
+``StreamEngine`` was the PR-1 entry point for the ingest → place → adapt →
+measure loop. That loop now lives in ``repro.api.DynamicGraphSystem`` behind
+the pluggable ``PartitionStrategy`` protocol; this module keeps the old
+constructor/telemetry surface working by translating ``StreamConfig`` into a
+``SystemConfig`` + strategy pair:
 
-    events ──► WindowIngestor (vectorized batch + expiry, backpressure)
-                   │ GraphDelta
-                   ▼
-               apply_delta (static-shape scatter, jit)
-                   │
-                   ▼
-               place_delta (online Fennel/DGR placement of arrivals, jit)
-                   │
-                   ▼
-               adapt_jit  (xDGP migration rounds, lax.scan, jit)
-                   │
-                   ▼
-               QualityTracker (incremental cut / occupancy, drift-checked)
+    placement="online", adapt_iters>0  → XdgpAdaptive()            ("xdgp")
+    placement="online", adapt_iters=0  → OnlineFennel()            ("fennel")
+    placement="hash",   adapt_iters>0  → XdgpAdaptive("inherit")
+    placement="hash",   adapt_iters=0  → Static()                  ("static")
 
-Each superstep emits one ``SuperstepRecord`` of telemetry — ingest rate,
-backlog, cut trajectory, imbalance, migrations, placement quality — which is
-what the throughput benchmark and the ops dashboard consume.
-
-The engine can additionally run a Pregel-style ``VertexProgram`` every
-superstep (pass ``program=`` at construction): after the adaptation rounds it
-executes one BSP compute superstep on the current graph and charges the
-message traffic it generated (``local_bytes``/``remote_bytes`` under the
-current assignment) to the superstep record. This is the paper's execution
-model — computation interleaved with adaptation, iteration time bound by
-cross-partition messages (§5.3) — and is what the scenario harness
-(``repro.scenarios``) measures end to end.
+``SuperstepRecord`` remains the shared per-superstep telemetry record (the
+session emits the identical dataclass), so downstream consumers are
+unaffected either way.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Iterable, List, Optional, Tuple
+import warnings
+from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition_state import PartitionState, default_capacity, make_state
-from repro.core.initial import initial_partition
-from repro.core.repartitioner import adapt_jit
-from repro.core.vertex_program import VertexProgram, message_volume
-from repro.core.vertex_program import superstep as program_superstep
-from repro.graph.structure import Graph, apply_delta
-from repro.stream.ingest import IngestStats, WindowIngestor, stream_batches
-from repro.stream.metrics import (QualityTracker, cut_ratio_of, delta_update,
-                                  drift_check, imbalance_of, init_tracker,
-                                  move_update)
-from repro.stream.placement import place_delta
+# safe during package init: telemetry is a leaf module of repro.api, and by
+# the time stream/__init__ reaches this file ingest/placement/metrics (all
+# the api layer needs) are already in sys.modules
+from repro.api.telemetry import SuperstepRecord
+from repro.core.vertex_program import VertexProgram
+from repro.graph.structure import Graph
+
+__all__ = ["StreamConfig", "StreamEngine", "SuperstepRecord"]
 
 
 @dataclasses.dataclass
@@ -69,203 +51,91 @@ class StreamConfig:
     seed: int = 0
 
 
-@dataclasses.dataclass
-class SuperstepRecord:
-    """Telemetry for one engine superstep."""
+def _system_config(graph: Graph, cfg: StreamConfig):
+    """Map the flat StreamConfig knob set onto the layered SystemConfig."""
+    from repro.api import (GraphSection, PartitionSection, StreamSection,
+                           SystemConfig, TelemetrySection)
+    from repro.api.strategy import OnlineFennel, Static, XdgpAdaptive
 
-    superstep: int
-    now: int                   # stream time at the end of the batch
-    events: int                # events offered this superstep
-    adds: int                  # edge additions released into the graph
-    dels: int                  # node expiries released
-    backlog_adds: int          # additions held back by a_cap backpressure
-    backlog_dels: int
-    invalid_events: int        # events rejected at ingest (ids out of range)
-    stale_dropped: int         # backlogged changes invalidated by window movement
-    new_placed: int            # vertices placed online this superstep
-    migrations: int            # vertices moved by the adaptation rounds
-    cut_edges: int
-    live_edges: int
-    cut_ratio: float
-    imbalance: float
-    ingest_seconds: float      # delta construction (the streaming front end)
-    step_seconds: float        # full superstep wall clock
-    drift: Optional[float]     # set on drift-check supersteps (must be 0.0)
-    dup_dropped: int = 0       # additions dropped as already-live (dedupe mode)
-    local_bytes: int = 0       # program message traffic staying intra-partition
-    remote_bytes: int = 0      # program message traffic crossing partitions
-    compute_seconds: float = 0.0  # vertex-program superstep wall clock
-
-    @property
-    def events_per_second(self) -> float:
-        return self.events / max(self.ingest_seconds, 1e-12)
-
-    def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["events_per_second"] = self.events_per_second
-        return d
+    if cfg.adapt_iters > 0:
+        strategy = XdgpAdaptive(
+            placement="online" if cfg.placement == "online" else "inherit")
+    elif cfg.placement == "online":
+        strategy = OnlineFennel()
+    else:
+        strategy = Static()
+    sys_cfg = SystemConfig(
+        graph=GraphSection(n_cap=graph.n_cap, e_cap=graph.e_cap),
+        stream=StreamSection(window=cfg.window, a_cap=cfg.a_cap,
+                             d_cap=cfg.d_cap, dedupe=cfg.dedupe),
+        partition=PartitionSection(
+            strategy=strategy.name, k=cfg.k, s=cfg.s,
+            adapt_iters=cfg.adapt_iters, tie_break=cfg.tie_break,
+            slack=cfg.slack, placement_passes=cfg.placement_passes),
+        telemetry=TelemetrySection(recompute_every=cfg.recompute_every),
+        seed=cfg.seed)
+    return sys_cfg, strategy
 
 
 class StreamEngine:
-    """Continuous dynamic-graph partitioning over an event stream."""
+    """Deprecated: use ``repro.api.DynamicGraphSystem``."""
 
     def __init__(self, graph: Graph, config: StreamConfig,
                  assignment: Optional[jax.Array] = None,
                  program: Optional[VertexProgram] = None):
+        warnings.warn(
+            "StreamEngine is deprecated; use repro.api.DynamicGraphSystem "
+            "with a SystemConfig (strategy 'xdgp' replaces "
+            "placement='online' + adapt_iters>0, 'static' the hash baseline)",
+            DeprecationWarning, stacklevel=2)
+        from repro.api import DynamicGraphSystem
         self.config = config
-        self.graph = graph
-        if assignment is None:
-            assignment = initial_partition(graph, config.k, "hsh")
-        # capacity is provisioned for the slot space, not the current live
-        # set: a stream can legally grow the graph to n_cap vertices.
-        capacity = default_capacity(graph.n_cap, config.k, config.slack)
-        self.state: PartitionState = make_state(
-            graph, assignment, config.k, slack=config.slack,
-            seed=config.seed, capacity=capacity)
-        self.ingestor = WindowIngestor(
-            n_cap=graph.n_cap, window=config.window,
-            a_cap=config.a_cap, d_cap=config.d_cap, dedupe=config.dedupe)
-        if config.dedupe:
-            em = np.asarray(graph.edge_mask)
-            if em.any():
-                self.ingestor.seed_live_edges(np.asarray(graph.src)[em],
-                                              np.asarray(graph.dst)[em])
-        self.tracker: QualityTracker = init_tracker(graph, self.state.assignment,
-                                                    config.k)
-        self.telemetry: List[SuperstepRecord] = []
-        self._superstep = 0
-        self._place_key = jax.random.PRNGKey(config.seed ^ 0x5EED)
-        cfg = config
-        self._adapt = jax.jit(lambda g, st: adapt_jit(
-            g, st, s=cfg.s, iters=cfg.adapt_iters, tie_break=cfg.tie_break))
-        # optional interleaved vertex program (think-like-a-vertex compute)
-        self.program = program
-        self.program_state: Optional[jax.Array] = None
-        if program is not None:
-            self.program_state = program.init(graph)
+        sys_cfg, strategy = _system_config(graph, config)
+        self._system = DynamicGraphSystem(graph, sys_cfg,
+                                          assignment=assignment,
+                                          strategy=strategy, program=program)
 
-            def _prog_step(before_mask, g, st, step):
-                # vertices born this superstep enter with their init state
-                born = g.node_mask & ~before_mask
-                st = jnp.where(born[:, None], program.init(g), st)
-                return program_superstep(program, g, st, step)
+    # -- delegated state ----------------------------------------------------
+    @property
+    def graph(self):
+        return self._system.graph
 
-            self._prog_step = jax.jit(_prog_step)
-            self._msg_volume = jax.jit(
-                lambda g, lab: message_volume(g, lab, program.state_dim))
+    @property
+    def state(self):
+        return self._system.state
 
-    # -- one superstep ------------------------------------------------------
+    @property
+    def tracker(self):
+        return self._system.tracker
+
+    @property
+    def ingestor(self):
+        return self._system.ingestor
+
+    @property
+    def telemetry(self) -> List[SuperstepRecord]:
+        return self._system.telemetry
+
+    @property
+    def program(self):
+        return self._system.program
+
+    @property
+    def program_state(self):
+        return self._system.program_state
+
+    # -- delegated behaviour ------------------------------------------------
     def superstep(self, events: np.ndarray, now: int) -> SuperstepRecord:
-        cfg = self.config
-        t_start = time.perf_counter()
+        return self._system.step(events, now)
 
-        # 1. INGEST: vectorized batch → one padded GraphDelta
-        delta, istats = self.ingestor.ingest(events, now)
-        t_ingest = time.perf_counter() - t_start
-
-        # 2. APPLY + PLACE: grow/shrink the graph, place arrivals online.
-        # A provably empty delta skips the device pipeline entirely (quiet
-        # stream gaps would otherwise pay full-graph scatters for no-ops).
-        before = self.graph
-        labels_before = self.state.assignment
-        if istats.adds_out == 0 and istats.dels_out == 0:
-            after = before
-            labels_placed = labels_before
-            new_placed = 0
-        else:
-            after = apply_delta(before, delta)
-            if cfg.placement == "online":
-                self._place_key, sub = jax.random.split(self._place_key)
-                labels_placed, pstats = place_delta(
-                    delta, before.node_mask, labels_before,
-                    self.tracker.occupancy, self.state.capacity, sub,
-                    k=cfg.k, passes=cfg.placement_passes)
-                new_placed = int(pstats.placed)
-            else:
-                labels_placed = labels_before
-                new_placed = int(jnp.sum(~before.node_mask & after.node_mask))
-
-            # 3. MEASURE the ingest: incremental cut/occupancy from diffs only
-            self.tracker, _ = delta_update(self.tracker, before, after,
-                                           labels_before, labels_placed)
-
-        # 4. ADAPT: interleaved xDGP migration rounds on the new graph
-        state = dataclasses.replace(self.state, assignment=labels_placed)
-        state = self._adapt(after, state)
-        self.tracker, moved = move_update(self.tracker, after,
-                                          labels_placed, state.assignment)
-
-        self.graph = after
-        self.state = state
-        self._superstep += 1
-
-        # dedupe mode models the live edge set exactly, which makes e_cap
-        # exhaustion detectable: apply_delta drops additions silently once
-        # free slots run out, and the mirror would drift forever after
-        if cfg.dedupe and self.ingestor.live_edge_count != int(self.tracker.edges):
-            raise RuntimeError(
-                f"edge capacity exhausted at superstep {self._superstep}: "
-                f"graph holds {int(self.tracker.edges)} live edges but "
-                f"{self.ingestor.live_edge_count} were released "
-                f"(e_cap={after.e_cap}); increase e_cap or lower a_cap")
-
-        # 5. COMPUTE: one BSP superstep of the vertex program on the adapted
-        # graph; its message traffic under the current assignment is the
-        # paper's execution-time driver (§5.3: remote messages dominate).
-        local_bytes = remote_bytes = 0
-        compute_seconds = 0.0
-        if self.program is not None:
-            t_c = time.perf_counter()
-            self.program_state = self._prog_step(
-                before.node_mask, after, self.program_state,
-                jnp.asarray(self._superstep, jnp.int32))
-            self.program_state.block_until_ready()
-            compute_seconds = time.perf_counter() - t_c
-            lb, rb = self._msg_volume(after, state.assignment)
-            local_bytes, remote_bytes = int(lb), int(rb)
-
-        # 6. DRIFT CHECK: periodic full recompute validates the tracker
-        drift = None
-        if cfg.recompute_every and self._superstep % cfg.recompute_every == 0:
-            self.tracker, drift = drift_check(self.tracker, after, state.assignment)
-
-        record = SuperstepRecord(
-            superstep=self._superstep, now=int(now),
-            events=int(np.asarray(events).shape[0]) if np.asarray(events).size else 0,
-            adds=istats.adds_out, dels=istats.dels_out,
-            backlog_adds=istats.adds_backlog, backlog_dels=istats.dels_backlog,
-            invalid_events=istats.invalid, stale_dropped=istats.stale_dropped,
-            new_placed=new_placed, migrations=int(moved),
-            cut_edges=int(self.tracker.cut), live_edges=int(self.tracker.edges),
-            cut_ratio=float(cut_ratio_of(self.tracker)),
-            imbalance=float(imbalance_of(self.tracker)),
-            ingest_seconds=t_ingest,
-            step_seconds=time.perf_counter() - t_start,
-            drift=drift,
-            dup_dropped=istats.dup_dropped,
-            local_bytes=local_bytes, remote_bytes=remote_bytes,
-            compute_seconds=compute_seconds,
-        )
-        self.telemetry.append(record)
-        return record
-
-    # -- windowed replay of a whole stream ---------------------------------
     def run_stream(self, times: np.ndarray, src: np.ndarray, dst: np.ndarray,
                    batch_span: int,
                    max_supersteps: Optional[int] = None) -> List[SuperstepRecord]:
         """Replay a (t, u, v) stream window-by-window through the engine."""
-        out: List[SuperstepRecord] = []
-        for now, events in stream_batches(times, src, dst, batch_span):
-            out.append(self.superstep(events, now))
-            if max_supersteps is not None and len(out) >= max_supersteps:
-                break
-        return out
+        return self._system.run((times, src, dst), batch_span=batch_span,
+                                max_supersteps=max_supersteps)
 
     def drain_backlog(self, now: int, max_supersteps: int = 64,
                       ) -> List[SuperstepRecord]:
         """Flush capacity-deferred changes with empty-input supersteps."""
-        out: List[SuperstepRecord] = []
-        empty = np.empty((0, 3), np.int64)
-        while len(self.ingestor.buffer) and len(out) < max_supersteps:
-            out.append(self.superstep(empty, now))
-        return out
+        return self._system.drain(now, max_supersteps=max_supersteps)

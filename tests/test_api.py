@@ -1,0 +1,326 @@
+"""repro.api front-door tests: config round-trip, strategy-registry
+resolution, shim equivalence (old StreamEngine telemetry == new
+DynamicGraphSystem telemetry on the same seed/stream), deprecation
+warnings on the seed-era entry points, and the frozen public-API snapshot."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.api import (DynamicGraphSystem, PartitionSection, StreamSection,
+                       SystemConfig, TelemetrySection, XdgpAdaptive,
+                       empty_graph, resolve_strategy, strategy_names)
+from repro.graph import cut_ratio, generators
+
+
+# ---------------------------------------------------------------------------
+# Public surface — frozen. Extend deliberately, never accidentally.
+# ---------------------------------------------------------------------------
+
+PUBLIC_API = [
+    # config
+    "SystemConfig", "GraphSection", "StreamSection", "PartitionSection",
+    "ComputeSection", "TelemetrySection",
+    # strategy protocol + registry
+    "PartitionStrategy", "StrategyContext",
+    "register_strategy", "resolve_strategy", "strategy_names",
+    # shipped strategies
+    "Static", "Hash", "Random", "Modulo", "Block", "Dgr", "Mnn",
+    "OnlineFennel", "XdgpAdaptive",
+    # session + measurement
+    "DynamicGraphSystem", "SuperstepRecord", "History", "CostModel",
+    "empty_graph", "bsr_snapshot", "partition_relabelled",
+]
+
+
+def test_public_api_snapshot():
+    assert api.__all__ == PUBLIC_API
+    for name in PUBLIC_API:
+        assert hasattr(api, name), name
+
+
+# ---------------------------------------------------------------------------
+# SystemConfig
+# ---------------------------------------------------------------------------
+
+def test_system_config_round_trip():
+    cfg = SystemConfig(
+        stream=StreamSection(window=123, batch_span=7, a_cap=11, d_cap=5,
+                             dedupe=True, carry_backlog=False),
+        partition=PartitionSection(strategy="fennel", k=3, s=0.7,
+                                   adapt_iters=2, tie_break="stay",
+                                   slack=0.33, placement_passes=4,
+                                   patience=9, max_iters=44, rel_tol=1e-2),
+        telemetry=TelemetrySection(recompute_every=3, bsr_blk=16),
+        seed=42)
+    d = cfg.to_dict()
+    assert SystemConfig.from_dict(d) == cfg
+    # the dict is plain JSON types all the way down
+    import json
+    assert SystemConfig.from_dict(json.loads(json.dumps(d))) == cfg
+
+
+def test_system_config_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown SystemConfig sections"):
+        SystemConfig.from_dict({"partitoin": {}})
+    with pytest.raises(ValueError, match="unknown keys.*partition"):
+        SystemConfig.from_dict({"partition": {"strateg": "xdgp"}})
+
+
+def test_with_strategy_swaps_one_field():
+    cfg = SystemConfig()
+    swapped = cfg.with_strategy("static")
+    assert swapped.partition.strategy == "static"
+    assert dataclasses.replace(swapped.partition, strategy="xdgp") == cfg.partition
+    assert swapped.stream == cfg.stream and swapped.seed == cfg.seed
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+def test_registry_resolution_names_aliases_instances():
+    assert resolve_strategy("xdgp").name == "xdgp"
+    assert resolve_strategy("adaptive").name == "xdgp"     # alias
+    assert resolve_strategy("hsh").name == "hash"          # seed-era alias
+    inst = XdgpAdaptive(placement="inherit")
+    assert resolve_strategy(inst) is inst
+    assert resolve_strategy(api.Static) .name == "static"  # class
+    for name in ("static", "hash", "random", "dgr", "mnn", "fennel", "xdgp"):
+        assert name in strategy_names()
+
+
+def test_registry_typo_lists_names():
+    with pytest.raises(ValueError) as ei:
+        resolve_strategy("xdpg")
+    msg = str(ei.value)
+    assert "xdpg" in msg and "xdgp" in msg and "static" in msg
+
+
+def test_initial_partition_goes_through_registry():
+    from repro.core import initial_partition
+    g = generators.fem_cube(6)
+    lab = initial_partition(g, 4, "hsh")
+    assert ((np.asarray(lab) >= 0) & (np.asarray(lab) < 4)).all()
+    # kwargs forward to the strategy constructor
+    r1 = initial_partition(g, 4, "rnd", seed=3)
+    r2 = initial_partition(g, 4, "rnd", seed=3)
+    assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    with pytest.raises(ValueError, match="registered strategies"):
+        initial_partition(g, 4, "hshh")
+
+
+def test_strategy_init_matches_legacy_functions():
+    from repro.core.initial import hash_partition, random_partition
+    g = generators.fem_cube(6)
+    assert np.array_equal(np.asarray(resolve_strategy("hash").init(g, 5)),
+                          np.asarray(hash_partition(g, 5)))
+    assert np.array_equal(np.asarray(resolve_strategy("random", seed=2).init(g, 5)),
+                          np.asarray(random_partition(g, 5, seed=2)))
+
+
+# ---------------------------------------------------------------------------
+# Shim equivalence: old front doors == new front door
+# ---------------------------------------------------------------------------
+
+_TIMING_FIELDS = {"ingest_seconds", "step_seconds", "compute_seconds"}
+
+
+def _structural(records):
+    out = []
+    for r in records:
+        d = dataclasses.asdict(r)
+        for f in _TIMING_FIELDS:
+            d.pop(f)
+        out.append(d)
+    return out
+
+
+@pytest.mark.parametrize("placement,adapt_iters",
+                         [("online", 3), ("hash", 0)])
+def test_stream_engine_shim_matches_system(placement, adapt_iters):
+    """StreamEngine.run_stream telemetry must equal DynamicGraphSystem.run
+    on the same seed/stream — the shim mapping is exact, not approximate."""
+    from repro.stream import StreamConfig, StreamEngine
+    from repro.stream.engine import _system_config
+
+    n, window = 250, 120
+    times, u, v = generators.sliding_window_stream(n, 2500, window, seed=4)
+    cfg = StreamConfig(k=4, window=window, adapt_iters=adapt_iters,
+                       placement=placement, a_cap=2048, d_cap=2048,
+                       recompute_every=3, seed=11)
+    g = empty_graph(n, 5000)
+    with pytest.warns(DeprecationWarning):
+        eng = StreamEngine(g, cfg)
+    recs_old = eng.run_stream(times, u, v, window // 2)
+
+    sys_cfg, strategy = _system_config(g, cfg)
+    system = DynamicGraphSystem(g, sys_cfg, strategy=strategy)
+    recs_new = system.run((times, u, v), batch_span=window // 2)
+
+    assert _structural(recs_old) == _structural(recs_new)
+    assert np.array_equal(np.asarray(eng.state.assignment),
+                          np.asarray(system.state.assignment))
+
+
+def test_adaptive_partitioner_shim_matches_converge():
+    """The deprecated batch driver and DynamicGraphSystem.converge() run the
+    identical heuristic under the same seed."""
+    from repro.core import AdaptiveConfig, AdaptivePartitioner, initial_partition
+    from repro.core.partition_state import default_capacity
+
+    g = generators.fem_cube(7)
+    k = 4
+    lab = initial_partition(g, k, "hsh")
+    with pytest.warns(DeprecationWarning):
+        part = AdaptivePartitioner(AdaptiveConfig(k=k, max_iters=30,
+                                                  patience=8, slack=0.2))
+    # pin the slot-space capacity the session provisions, so both drivers
+    # start from the identical PartitionState
+    cap = default_capacity(g.n_cap, k, 0.2)
+    state = part.init_state(g, lab, capacity=cap)
+    state, hist_old = part.run_to_convergence(g, state)
+
+    cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=k,
+                                                  max_iters=30, patience=8,
+                                                  slack=0.2))
+    system = DynamicGraphSystem(g, cfg, assignment=lab)
+    hist_new = system.converge()
+    assert hist_old.as_dict() == hist_new.as_dict()
+    assert np.array_equal(np.asarray(state.assignment),
+                          np.asarray(system.labels))
+
+
+def test_deprecation_warnings_on_seed_entry_points():
+    from repro.graph.dynamics import ChangeQueue, SlidingWindowGraph
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        ChangeQueue(a_cap=4, d_cap=4)
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        SlidingWindowGraph(empty_graph(10, 10), window=5)
+
+
+# ---------------------------------------------------------------------------
+# Session behaviour
+# ---------------------------------------------------------------------------
+
+def test_strategy_swap_reproduces_adaptive_vs_static():
+    """Swapping xdgp → static in the one SystemConfig field is the paper's
+    comparison: same stream, adaptive ends with the lower cut."""
+    n, window = 250, 120
+    times, u, v = generators.sliding_window_stream(n, 3000, window, seed=6)
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=window // 2),
+        partition=PartitionSection(strategy="xdgp", k=4, adapt_iters=4),
+        telemetry=TelemetrySection(recompute_every=2))
+    runs = {}
+    for name in ("xdgp", "static"):
+        system = DynamicGraphSystem(empty_graph(n, 5000),
+                                    cfg.with_strategy(name))
+        system.run((times, u, v))
+        runs[name] = system
+    assert runs["xdgp"].cut_ratio < runs["static"].cut_ratio
+    # static == zero migrations, zero online placements beyond inheritance
+    assert sum(r.migrations for r in runs["static"].telemetry) == 0
+
+
+def test_compare_keys_and_direction():
+    """compare() keeps the historical harness layout and picks the winner."""
+    n, window = 250, 120
+    times, u, v = generators.sliding_window_stream(n, 3000, window, seed=8)
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=window // 2),
+        partition=PartitionSection(strategy="xdgp", k=4, adapt_iters=4),
+        compute=api.ComputeSection(program="degree"),
+        telemetry=TelemetrySection(recompute_every=2))
+    system = DynamicGraphSystem(empty_graph(n, 5000), cfg)
+    # a comparison without a vertex program would score 0 vs 0 and fabricate
+    # a 100% reduction — the session refuses instead
+    bare = SystemConfig(stream=cfg.stream, partition=cfg.partition,
+                        telemetry=cfg.telemetry)
+    with pytest.raises(RuntimeError, match="vertex program"):
+        DynamicGraphSystem(empty_graph(n, 5000), bare).compare((times, u, v))
+    row = system.compare((times, u, v), baseline="static")
+    for key in ("adaptive", "static", "exec_cost_reduction_pct",
+                "remote_reduction_pct", "cut_improvement",
+                "bsr_tile_reduction_pct", "meets_50pct_claim",
+                "scenario", "program", "k", "events", "notes"):
+        assert key in row, key
+    for sub in ("adaptive", "static"):
+        for key in ("mode", "supersteps", "events", "cut_final", "cut_mean",
+                    "imbalance_final", "migrations_total", "placed_total",
+                    "local_bytes", "remote_bytes", "exec_cost_total",
+                    "exec_cost_per_superstep", "adaptation_cost",
+                    "compute_seconds", "wall_seconds", "bsr",
+                    "cut_trajectory"):
+            assert key in row[sub], (sub, key)
+    assert row["adaptive"]["cut_final"] <= row["static"]["cut_final"]
+
+
+def test_inject_and_snapshot():
+    g = generators.fem_cube(7, n_cap=420, e_cap=1600)   # head-room for growth
+    cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=4,
+                                                  max_iters=40, patience=10,
+                                                  slack=0.3))
+    system = DynamicGraphSystem(g, cfg)
+    before = system.snapshot()
+    system.converge()
+    after = system.snapshot()
+    assert after["cut_ratio"] < before["cut_ratio"]
+    delta = generators.forest_fire_delta(system.graph, 0.05, seed=2)
+    placed = system.inject(delta)
+    assert placed > 0
+    snap = system.snapshot()
+    # the incremental tracker stays exact through inject()
+    assert snap["cut_ratio"] == pytest.approx(
+        float(cut_ratio(system.graph, system.labels)), abs=1e-6)
+    assert snap["nodes"] == int(np.asarray(system.graph.node_mask).sum())
+
+
+def test_custom_strategy_plugs_in():
+    """Anything satisfying the protocol works — no subclassing required."""
+    import jax.numpy as jnp
+
+    class Blocky:
+        name = "blocky-custom"
+
+        def init(self, graph, k):
+            ids = jnp.arange(graph.n_cap)
+            per = -(-graph.n_cap // k)
+            return jnp.minimum(ids // per, k - 1).astype(jnp.int32)
+
+        def place(self, delta, ctx):
+            return ctx.assignment
+
+        def adapt(self, graph, state, ctx):
+            return state
+
+        def converge(self, graph, state, ctx):
+            from repro.core.repartitioner import History
+            return state, History.empty()
+
+        def adapt_rounds(self, graph, state, iters, ctx):
+            from repro.core.repartitioner import History
+            return state, History.empty()
+
+    n, window = 150, 100
+    times, u, v = generators.sliding_window_stream(n, 1200, window, seed=1)
+    cfg = SystemConfig(stream=StreamSection(window=window, batch_span=50),
+                       partition=PartitionSection(strategy="static", k=3),
+                       telemetry=TelemetrySection(recompute_every=1))
+    system = DynamicGraphSystem(empty_graph(n, 3000), cfg, strategy=Blocky())
+    recs = system.run((times, u, v), max_supersteps=6)
+    assert system.strategy.name == "blocky-custom"
+    assert all(r.drift == 0.0 for r in recs if r.drift is not None)
+
+
+def test_scenario_is_a_valid_stream():
+    """A Scenario drops into run()/compare() directly (batch_span honoured)."""
+    from repro.scenarios import SCENARIOS
+    scn = SCENARIOS["cellular"]("smoke", seed=0)
+    system = DynamicGraphSystem(scn.graph, scn.system_config())
+    recs = system.run(scn, max_supersteps=4)
+    assert len(recs) == 4
+    assert recs[0].now == int(np.asarray(scn.times).min()) + scn.batch_span - 1 \
+        or recs[0].now >= int(np.asarray(scn.times).min())
