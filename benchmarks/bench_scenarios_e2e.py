@@ -30,13 +30,15 @@ from benchmarks.common import save
 from repro.scenarios import SCENARIOS, CostModel, compare_scenario
 
 
-def run(scale: str, scenarios: List[str], bsr_blk: int, seed: int) -> Dict:
+def run(scale: str, scenarios: List[str], bsr_blk: int, seed: int,
+        backend: str = "auto") -> Dict:
     cost = CostModel()
     rows = []
     for name in scenarios:
         t0 = time.perf_counter()
         scn = SCENARIOS[name](scale, seed=seed)
-        row = compare_scenario(scn, bsr_blk=bsr_blk, cost=cost)
+        row = compare_scenario(scn, bsr_blk=bsr_blk, cost=cost,
+                               backend=backend)
         row["build_seconds"] = round(time.perf_counter() - t0, 2)
         rows.append(row)
         a, s = row["adaptive"], row["static"]
@@ -52,6 +54,7 @@ def run(scale: str, scenarios: List[str], bsr_blk: int, seed: int) -> Dict:
     met = sum(r["meets_50pct_claim"] for r in rows)
     payload = {
         "bench": "scenarios_e2e", "scale": scale, "seed": seed,
+        "backend": backend,
         "cost_model": {"c_cpu": cost.c_cpu, "c_net": cost.c_net,
                        "c_mig": cost.c_mig},
         "rows": rows,
@@ -79,10 +82,15 @@ def main() -> None:
                     choices=list(SCENARIOS))
     ap.add_argument("--bsr-blk", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("auto", "ref", "pallas"),
+                    default="auto",
+                    help="migration-scoring backend (DESIGN.md §9); results "
+                         "are bit-identical across backends")
     args = ap.parse_args()
 
-    print(f"scenario e2e suite (scale={args.scale})")
-    payload = run(args.scale, args.scenarios, args.bsr_blk, args.seed)
+    print(f"scenario e2e suite (scale={args.scale}, backend={args.backend})")
+    payload = run(args.scale, args.scenarios, args.bsr_blk, args.seed,
+                  backend=args.backend)
     path = save("bench_scenarios_e2e", payload)
     met, out_of = payload["claim"]["met_on"], payload["claim"]["out_of"]
     print(f">50% execution-cost reduction met on {met}/{out_of} scenarios")

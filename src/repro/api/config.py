@@ -13,6 +13,25 @@ Every field is a JSON-compatible scalar, so ``to_dict``/``from_dict``
 round-trip losslessly — configs can live in result files, CI matrices and
 experiment sweeps. ``from_dict`` rejects unknown keys with the valid set in
 the message (the same fail-loudly contract as the strategy registry).
+
+Example — build a config, round-trip it through plain JSON data, and swap
+the strategy for the baseline comparison (doctested in CI):
+
+    >>> from repro.api import PartitionSection, SystemConfig
+    >>> cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=4))
+    >>> cfg.partition.k
+    4
+    >>> SystemConfig.from_dict(cfg.to_dict()) == cfg
+    True
+    >>> cfg.with_strategy("static").partition.strategy
+    'static'
+    >>> cfg.compute.backend           # migration scoring path (DESIGN.md §9)
+    'auto'
+    >>> try:
+    ...     SystemConfig.from_dict({"partitoin": {}})
+    ... except ValueError as e:
+    ...     "unknown SystemConfig sections" in str(e)
+    True
 """
 from __future__ import annotations
 
@@ -65,6 +84,8 @@ class ComputeSection:
     c_cpu: float = 1.0             # cost per local message byte
     c_net: float = 25.0            # cost per remote message byte (§5.3: 25×)
     c_mig: float = 50.0            # cost per migrated vertex, in message units
+    backend: str = "auto"          # migration scoring: "ref" | "pallas" |
+                                   # "auto" (DESIGN.md §9; compat resolves)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -25,6 +25,26 @@ instance and raises a ``ValueError`` listing every registered name on a
 typo. ``repro.core.initial.initial_partition`` dispatches through the same
 registry, so "adaptive vs. static-hash" is two strategy values — never two
 code paths.
+
+Example — resolve strategies from the registry and plug in a custom one
+(doctested in CI):
+
+    >>> from repro.api import register_strategy, resolve_strategy, strategy_names
+    >>> {"static", "hash", "fennel", "xdgp"} <= set(strategy_names())
+    True
+    >>> resolve_strategy("xdgp").name          # name, class or instance
+    'xdgp'
+    >>> from repro.api.strategy import StrategyBase
+    >>> @register_strategy("doctest-noop")
+    ... class Noop(StrategyBase):
+    ...     name = "doctest-noop"
+    >>> resolve_strategy("doctest-noop").name
+    'doctest-noop'
+    >>> try:
+    ...     resolve_strategy("typo")
+    ... except ValueError as e:
+    ...     "registered strategies" in str(e)
+    True
 """
 from __future__ import annotations
 
@@ -33,6 +53,7 @@ from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_check
 
 import jax
 
+from repro.compat import resolve_backend
 from repro.core.initial import (block_partition, deterministic_greedy,
                                 hash_partition, min_neighbours,
                                 modulo_partition, random_partition)
@@ -62,6 +83,7 @@ class StrategyContext:
     max_iters: int = 500
     rel_tol: float = 1e-3
     record_history: bool = True
+    backend: str = "auto"          # migration scoring backend (DESIGN.md §9)
     # runtime arrays (filled by the system per call)
     node_mask: Optional[jax.Array] = None    # liveness *before* the delta
     assignment: Optional[jax.Array] = None   # current labels
@@ -289,26 +311,46 @@ class XdgpAdaptive(OnlineFennel):
             return ctx.assignment
         return super().place(delta, ctx)
 
+    def _plan(self, graph: Graph, backend: str):
+        """Pre-pack the adjacency for the fused scorer (batch modes only).
+
+        Streaming ``adapt`` passes ``plan=None`` — the packing-free flat
+        plan — because the graph changes every superstep and a host-side
+        repack per superstep would cost more than it saves. The batch
+        drivers (``converge``/``adapt_rounds``) run many iterations over a
+        fixed graph, so one pack amortises across all of them.
+        """
+        if backend != "pallas":
+            return None
+        from repro.kernels.migration_kernels import build_plan
+        return build_plan(graph)
+
     def adapt(self, graph: Graph, state: PartitionState,
               ctx: StrategyContext) -> PartitionState:
-        key = (ctx.s, ctx.adapt_iters, ctx.tie_break)
+        backend = resolve_backend(ctx.backend)
+        key = (ctx.s, ctx.adapt_iters, ctx.tie_break, backend)
         fn = self._adapt_cache.get(key)
         if fn is None:
-            s, iters, tie_break = key
+            s, iters, tie_break, bk = key
             fn = jax.jit(lambda g, st: adapt_jit(g, st, s=s, iters=iters,
-                                                 tie_break=tie_break))
+                                                 tie_break=tie_break,
+                                                 backend=bk))
             self._adapt_cache[key] = fn
         return fn(graph, state)
 
     def converge(self, graph: Graph, state: PartitionState,
                  ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        backend = resolve_backend(ctx.backend)
         return run_to_convergence(
             graph, state, s=ctx.s, patience=ctx.patience,
             max_iters=ctx.max_iters, tie_break=ctx.tie_break,
-            rel_tol=ctx.rel_tol, record_history=ctx.record_history)
+            rel_tol=ctx.rel_tol, record_history=ctx.record_history,
+            backend=backend, plan=self._plan(graph, backend))
 
     def adapt_rounds(self, graph: Graph, state: PartitionState, iters: int,
                      ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        backend = resolve_backend(ctx.backend)
         return adapt_rounds(graph, state, iters, s=ctx.s,
                             tie_break=ctx.tie_break,
-                            record_history=ctx.record_history)
+                            record_history=ctx.record_history,
+                            backend=backend, plan=self._plan(graph, backend))

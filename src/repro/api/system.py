@@ -36,7 +36,24 @@ harness's hand-wired dual run (comparison):
 
 Swapping ``config.partition.strategy`` between ``"xdgp"`` and ``"static"``
 reproduces the paper's adaptive-vs-static-hash comparison with no other
-code changes.
+code changes; ``config.compute.backend`` independently selects the
+migration-scoring implementation (fused kernels vs the unfused reference —
+bit-identical results, DESIGN.md §9).
+
+Example — batch-adapt a static mesh to quiescence (doctested in CI):
+
+    >>> from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
+    >>> from repro.graph.generators import fem_grid2d
+    >>> g = fem_grid2d(8)                                  # 64-vertex mesh
+    >>> cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=4))
+    >>> system = DynamicGraphSystem(g, cfg)
+    >>> before = system.cut_ratio                          # hash partitioning
+    >>> hist = system.converge(record_history=False)
+    >>> system.cut_ratio < before                          # paper §3: improved
+    True
+    >>> snap = system.snapshot()
+    >>> snap["nodes"], snap["k"]
+    (64, 4)
 """
 from __future__ import annotations
 
@@ -213,7 +230,8 @@ class DynamicGraphSystem:
         return StrategyContext(
             k=p.k, s=p.s, adapt_iters=p.adapt_iters, tie_break=p.tie_break,
             placement_passes=p.placement_passes, patience=p.patience,
-            max_iters=p.max_iters, rel_tol=p.rel_tol, **runtime)
+            max_iters=p.max_iters, rel_tol=p.rel_tol,
+            backend=self.config.compute.backend, **runtime)
 
     def _place(self, delta: GraphDelta, before: Graph, after: Graph,
                ) -> Tuple[jax.Array, int]:

@@ -1,4 +1,4 @@
-"""Version-compat shims over moving JAX APIs.
+"""Version- and platform-compat shims over moving JAX APIs.
 
 The repo targets the newest public API surface (``jax.shard_map``,
 ``jax.make_mesh(..., axis_types=...)``) but must run on whatever JAX the
@@ -10,9 +10,14 @@ a version bump is a one-file change.
 * ``shard_map(...)`` — ``jax.shard_map`` graduated from
   ``jax.experimental.shard_map``; the experimental one additionally needs
   ``check_rep=False`` for programs that thread PRNG keys through collectives.
+* ``resolve_backend`` / ``pallas_executor`` — the one place that decides how
+  the fused migration kernels execute on this host (DESIGN.md §9): native
+  Mosaic on TPU, the bit-exact pure-jax oracle on CPU, or the Pallas
+  interpreter when CI forces it.
 """
 from __future__ import annotations
 
+import os
 from typing import Sequence, Tuple
 
 import jax
@@ -48,3 +53,55 @@ def axis_size(axis_name: str):
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Compute-backend selection for the fused migration kernels (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+_BACKENDS = ("ref", "pallas")
+_EXECUTORS = ("native", "interpret", "jax")
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve ``SystemConfig.compute.backend`` to ``"ref"`` or ``"pallas"``.
+
+    ``"auto"`` (the default, overridable via ``REPRO_COMPUTE_BACKEND``)
+    selects the fused ``"pallas"`` path: it has an executor on every
+    platform (see :func:`pallas_executor`) and is bit-identical to the
+    reference path, so there is never a correctness reason to avoid it.
+    ``"ref"`` keeps the unfused op-by-op scoring pipeline — the oracle the
+    parity suite and the kernel benchmark compare against.
+    """
+    if backend == "auto":
+        backend = os.environ.get("REPRO_COMPUTE_BACKEND", "pallas")
+        if backend == "auto":                # env var may restate the default
+            backend = "pallas"
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown compute backend {backend!r}; "
+                         f"valid: {('auto',) + _BACKENDS}")
+    return backend
+
+
+def pallas_executor() -> str:
+    """How the fused kernels execute on this host.
+
+    * ``"native"``    — Mosaic-compiled Pallas kernels over BSR tiles
+                        (TPU; the MXU path DESIGN.md §9 describes).
+    * ``"interpret"`` — the same Pallas kernels under ``interpret=True``
+                        (bit-faithful to the kernel body; used by the CPU
+                        parity CI via ``REPRO_PALLAS_EXECUTOR=interpret``).
+    * ``"jax"``       — the fused pure-jax oracle from ``kernels/ref.py``
+                        (CPU default: interpreting per-tile Python inside a
+                        streaming loop is a debugger, not a runtime).
+
+    All three produce bit-identical partition assignments; the parity suite
+    (``tests/test_migration_kernels.py``) holds that as a property.
+    """
+    executor = os.environ.get("REPRO_PALLAS_EXECUTOR")
+    if executor is not None:
+        if executor not in _EXECUTORS:
+            raise ValueError(f"unknown REPRO_PALLAS_EXECUTOR {executor!r}; "
+                             f"valid: {_EXECUTORS}")
+        return executor
+    return "native" if jax.default_backend() == "tpu" else "jax"

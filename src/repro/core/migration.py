@@ -14,6 +14,14 @@ Fully vectorised SPMD formulation of the paper's per-vertex loop:
                 is a deterministic within-group prefix count (order-free).
   6. DEFER    — admitted moves are written to ``pending``; they commit at the
                 start of the next iteration (step 1).
+
+Steps 2–4 have two implementations behind ``migrate_step``'s static
+``backend`` switch (DESIGN.md §9): ``"ref"`` is the unfused op-by-op
+pipeline below (the correctness oracle), ``"pallas"`` dispatches through the
+fused kernels in ``repro.kernels.migration_kernels`` — bit-identical
+assignments, shared RNG draws, one pass over the adjacency. Steps 5–6 are
+shared; the fused path ranks movers with the single-key sort
+(``_rank_within_group_fast``), which produces identical ranks.
 """
 from __future__ import annotations
 
@@ -115,11 +123,50 @@ def _rank_within_group(group: jax.Array, active: jax.Array) -> jax.Array:
     return jnp.where(active, rank, jnp.int32(0))
 
 
-@partial(jax.jit, static_argnames=("s", "use_chunked_counts", "tie_break"))
-def migrate_step(state: PartitionState, graph: Graph, *, s: float = 0.5,
-                 use_chunked_counts: bool = False, tie_break: str = "random",
+def _rank_within_group_fast(group: jax.Array, active: jax.Array,
+                            num_groups: int) -> jax.Array:
+    """Bit-identical ranks to ``_rank_within_group`` via one unstable sort.
+
+    Packs ``(group, position)`` into a single int32 key (unique ⇒ the
+    unstable sort recovers exactly the stable order), so XLA sorts one
+    array instead of a stable key/index pair — ~2× faster on CPU. Falls
+    back to the stable variant when the packed key would overflow int32.
+    """
+    n = group.shape[0]
+    if (num_groups + 1) * n >= 2 ** 31:      # static shapes: a Python check
+        return _rank_within_group(group, active)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    key = jnp.where(active, group, num_groups) * n + pos
+    skey = jnp.sort(key)
+    g_s = skey // n
+    pos_s = skey % n
+    is_start = jnp.concatenate([jnp.ones((1,), bool), g_s[1:] != g_s[:-1]])
+    start_pos = jnp.where(is_start, pos, 0)
+    run_start = jax.lax.associative_scan(jnp.maximum, start_pos)
+    rank_sorted = pos - run_start
+    rank = jnp.zeros((n,), jnp.int32).at[pos_s].set(rank_sorted)
+    return jnp.where(active, rank, jnp.int32(0))
+
+
+@partial(jax.jit, static_argnames=("s", "use_chunked_counts", "tie_break",
+                                   "backend", "executor"))
+def migrate_step(state: PartitionState, graph: Graph, plan=None, *,
+                 s: float = 0.5, use_chunked_counts: bool = False,
+                 tie_break: str = "random", backend: str = "ref",
+                 executor: Optional[str] = None,
                  ) -> Tuple[PartitionState, MigrationStats]:
-    """One full adaptive iteration (commit → score → decide → damp → quota → defer)."""
+    """One full adaptive iteration (commit → score → decide → damp → quota → defer).
+
+    ``backend="ref"`` runs the unfused op pipeline below; ``"pallas"``
+    dispatches score/decide/damp through the fused kernels
+    (``repro.kernels.migration_kernels.score_select``), optionally over a
+    pre-packed ``plan`` (None = the packing-free flat plan — what the
+    streaming path uses). Both backends draw the same RNG and produce
+    bit-identical assignments. ``executor`` pins the kernel executor
+    (``native``/``interpret``/``jax``); None resolves via
+    ``repro.compat.pallas_executor()`` at trace time, so an env override
+    must be in place before the first traced call.
+    """
     k = state.k
     node_mask = graph.node_mask
 
@@ -128,19 +175,38 @@ def migrate_step(state: PartitionState, graph: Graph, *, s: float = 0.5,
     assignment = jnp.where(has_pending, state.pending, state.assignment)
     committed = jnp.sum(has_pending & node_mask).astype(jnp.int32)
 
-    # ---- 2. SCORE -------------------------------------------------------
-    counts = neighbour_partition_counts(graph, assignment, k, chunked=use_chunked_counts)
-
-    # ---- 3. DECIDE ------------------------------------------------------
     rng, tie_key, sub = jax.random.split(state.rng, 3)
-    target = greedy_targets(counts, assignment, node_mask, rng=tie_key,
-                            tie_break=tie_break)
-    wants_move = (target != assignment) & node_mask
+    if backend == "pallas":
+        # ---- 2–4. fused SCORE + DECIDE + DAMP (DESIGN.md §9) ------------
+        from repro.kernels.migration_kernels import score_select
+        n_cap = graph.n_cap
+        if tie_break == "random":
+            noise = jax.random.uniform(tie_key, (n_cap, k))
+        else:
+            noise = jnp.zeros((n_cap, k), jnp.float32)
+        gate = jax.random.bernoulli(sub, p=s, shape=(n_cap,))
+        _, target, willing, _ = score_select(
+            graph, plan, assignment, node_mask, noise, gate, k,
+            tie_break=tie_break, executor=executor)
+        n_willing = jnp.sum(willing).astype(jnp.int32)
+        rank_fn = partial(_rank_within_group_fast, num_groups=k * k)
+    elif backend == "ref":
+        # ---- 2. SCORE ---------------------------------------------------
+        counts = neighbour_partition_counts(graph, assignment, k,
+                                            chunked=use_chunked_counts)
 
-    # ---- 4. DAMP (Bernoulli(s), paper §3.4) ------------------------------
-    gate = jax.random.bernoulli(sub, p=s, shape=wants_move.shape)
-    willing = wants_move & gate
-    n_willing = jnp.sum(willing).astype(jnp.int32)
+        # ---- 3. DECIDE --------------------------------------------------
+        target = greedy_targets(counts, assignment, node_mask, rng=tie_key,
+                                tie_break=tie_break)
+        wants_move = (target != assignment) & node_mask
+
+        # ---- 4. DAMP (Bernoulli(s), paper §3.4) --------------------------
+        gate = jax.random.bernoulli(sub, p=s, shape=wants_move.shape)
+        willing = wants_move & gate
+        n_willing = jnp.sum(willing).astype(jnp.int32)
+        rank_fn = _rank_within_group
+    else:
+        raise ValueError(f"unknown backend {backend!r}; valid: ref, pallas")
 
     # ---- 5. QUOTA (paper §3.3) -------------------------------------------
     occ = occupancy(
@@ -150,7 +216,7 @@ def migrate_step(state: PartitionState, graph: Graph, *, s: float = 0.5,
     quota = free // jnp.maximum(k - 1, 1)                          # Q^{i,j}, same for all i
     src_part = jnp.clip(assignment, 0, k - 1)
     group = src_part * k + jnp.clip(target, 0, k - 1)              # (i, j) pair id
-    rank = _rank_within_group(group, willing)
+    rank = rank_fn(group, willing)
     admitted = willing & (rank < quota[jnp.clip(target, 0, k - 1)])
     n_admitted = jnp.sum(admitted).astype(jnp.int32)
 

@@ -68,6 +68,7 @@ def run_to_convergence(graph: Graph, state: PartitionState, *, s: float = 0.5,
                        tie_break: str = "random", rel_tol: float = 1e-3,
                        chunked_counts: bool = False,
                        record_history: bool = True,
+                       backend: str = "ref", plan=None,
                        ) -> Tuple[PartitionState, History]:
     """Iterate until converged.
 
@@ -76,15 +77,19 @@ def run_to_convergence(graph: Graph, state: PartitionState, *, s: float = 0.5,
     tied boundaries keep fluctuating forever, so we additionally stop when
     the cut ratio has not improved by ``rel_tol`` over a ``patience``
     iteration window.
+
+    ``backend``/``plan`` select the scoring implementation per iteration
+    (see ``migrate_step``); the graph is fixed for the whole loop, so one
+    pre-packed ``plan`` amortises over every iteration.
     """
     hist = History.empty()
     quiet = 0
     best_cut = float("inf")
     stale = 0
     for _ in range(max_iters):
-        state, stats = migrate_step(state, graph, s=s,
+        state, stats = migrate_step(state, graph, plan, s=s,
                                     use_chunked_counts=chunked_counts,
-                                    tie_break=tie_break)
+                                    tie_break=tie_break, backend=backend)
         moved = int(stats.committed)
         pending = int(stats.admitted)
         cut = float(cut_ratio(graph, state.assignment))
@@ -111,6 +116,7 @@ def adapt_rounds(graph: Graph, state: PartitionState, iters: int, *,
                  s: float = 0.5, tie_break: str = "random",
                  chunked_counts: bool = False,
                  record_history: bool = True,
+                 backend: str = "ref", plan=None,
                  ) -> Tuple[PartitionState, History]:
     """Run a fixed number of adaptation iterations (continuous mode).
 
@@ -119,9 +125,9 @@ def adapt_rounds(graph: Graph, state: PartitionState, iters: int, *,
     """
     hist = History.empty()
     for _ in range(iters):
-        state, stats = migrate_step(state, graph, s=s,
+        state, stats = migrate_step(state, graph, plan, s=s,
                                     use_chunked_counts=chunked_counts,
-                                    tie_break=tie_break)
+                                    tie_break=tie_break, backend=backend)
         if record_history:
             hist.cut_ratio.append(float(cut_ratio(graph, state.assignment)))
             hist.migrations.append(int(stats.committed))
@@ -175,7 +181,8 @@ class AdaptivePartitioner:
 
 def converge_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
                  patience: int = 30, max_iters: int = 500,
-                 tie_break: str = "stay") -> PartitionState:
+                 tie_break: str = "stay", backend: str = "ref",
+                 plan=None) -> PartitionState:
     """Pure lax.while_loop convergence (no history) — embeddable inside jit.
 
     Used by the distributed engine and the dry-run lowering of the
@@ -189,7 +196,8 @@ def converge_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
 
     def body(carry):
         st, quiet, it = carry
-        st, stats = migrate_step(st, graph, s=s, tie_break=tie_break)
+        st, stats = migrate_step(st, graph, plan, s=s, tie_break=tie_break,
+                                 backend=backend)
         moved = stats.committed + stats.admitted
         quiet = jnp.where(moved == 0, quiet + 1, 0)
         return st, quiet, it + 1
@@ -200,11 +208,14 @@ def converge_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
 
 
 def adapt_jit(graph: Graph, state: PartitionState, *, s: float = 0.5,
-              iters: int = 30, tie_break: str = "random") -> PartitionState:
-    """Fixed-iteration adaptation as a single jit program (lax.scan)."""
+              iters: int = 30, tie_break: str = "random",
+              backend: str = "ref", plan=None) -> PartitionState:
+    """Fixed-iteration adaptation as a single jit program (lax.scan) — the
+    fused superstep the streaming engine dispatches per batch."""
 
     def body(st, _):
-        st, stats = migrate_step(st, graph, s=s, tie_break=tie_break)
+        st, stats = migrate_step(st, graph, plan, s=s, tie_break=tie_break,
+                                 backend=backend)
         return st, stats.committed
 
     state, _ = jax.lax.scan(body, state, None, length=iters)

@@ -1,3 +1,21 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""The kernel layer: Pallas TPU kernels for the repo's compute hot spots.
+
+Each kernel ships with a pure-jax oracle in ``ref.py`` (its correctness
+contract) and, where it sits on the xDGP hot path, a CPU executor so the
+fused algorithm runs everywhere (DESIGN.md §9):
+
+  bsr_spmm.py           BSR SpMM over 128×128 MXU tiles (GNN aggregation,
+                        ``counts = A @ one_hot(labels)``) — DESIGN.md §2.
+  migration_kernels.py  the fused xDGP superstep scorer: neighbour-label
+                        histogram + gain scoring + greedy selection in one
+                        pass over BSR tiles, with ELL/flat pure-jax
+                        executors and ``MigrationPlan`` packing — §9.
+  flash_attention.py    blocked flash attention (causal/windowed/softcap).
+  embedding_bag.py      EmbeddingBag gather-sum for the recsys tower.
+  ops.py                public jit'd wrappers (interpret=True on CPU).
+  ref.py                pure-jnp oracles for every kernel above.
+
+Parity rule: a kernel and its oracle must agree bit-for-bit on integer
+data and to float tolerance otherwise; ``tests/test_kernels.py`` and
+``tests/test_migration_kernels.py`` hold the contracts.
+"""

@@ -45,7 +45,10 @@ def partition_counts(bsr: BSRMatrix, assignment: jax.Array, k: int,
     """xDGP migration scorer on TPU: counts = A @ one_hot(labels).
 
     Returns (n_cap_padded, k) neighbour counts — the kernel-served version
-    of core.migration.neighbour_partition_counts.
+    of core.migration.neighbour_partition_counts. The migration hot path
+    itself dispatches through the *fused* scorer (histogram + greedy
+    selection + damping in one pass) in ``kernels/migration_kernels.py``;
+    this wrapper stays as the standalone SpMM formulation.
     """
     n = bsr.n_blocks * bsr.blk
     lab = jnp.clip(assignment, 0, k - 1)[:n]

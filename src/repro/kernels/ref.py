@@ -56,6 +56,71 @@ def ref_bsr_spmm(blocks: jax.Array, block_cols: jax.Array, row_ptr: jax.Array,
     return out.reshape(n_blocks * blk, d).astype(x.dtype)
 
 
+def ref_bsr_label_histogram(blocks: jax.Array, block_cols: jax.Array,
+                            row_ptr: jax.Array, labels: jax.Array,
+                            k: int) -> jax.Array:
+    """Oracle for the fused migration-scoring kernel's histogram stage.
+
+    counts[v, j] = Σ_u A[v, u] · [labels[u] == j] over the BSR tiles —
+    ``A @ one_hot(labels)`` with the one-hot built inside the contraction,
+    exactly as the Pallas kernel does. Padding tiles (``block_cols == -1``)
+    contribute nothing. Returns float32 ``(n_blocks*blk, k)``; entries are
+    exact integers for unweighted adjacencies.
+    """
+    nnzb, blk, _ = blocks.shape
+    n_blocks = row_ptr.shape[0] - 1
+    onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)   # out-of-range → 0
+    onehot = onehot.reshape(n_blocks, blk, k)
+    rows = jnp.searchsorted(row_ptr, jnp.arange(nnzb), side="right") - 1
+    valid = block_cols >= 0
+    cols_safe = jnp.clip(block_cols, 0, n_blocks - 1)
+    prods = jnp.einsum("nij,njd->nid", blocks.astype(jnp.float32),
+                       onehot[cols_safe])
+    prods = jnp.where(valid[:, None, None], prods, 0.0)
+    out = jax.ops.segment_sum(prods, jnp.clip(rows, 0, n_blocks - 1),
+                              num_segments=n_blocks)
+    return out.reshape(n_blocks * blk, k)
+
+
+def ref_score_select(counts: jax.Array, assignment: jax.Array,
+                     node_mask: jax.Array, noise: jax.Array,
+                     gate: jax.Array, *, tie_break: str = "random"
+                     ) -> tuple:
+    """Oracle for the kernel's fused decide+damp epilogue (paper §3.2/§3.4).
+
+    Given per-vertex neighbour-label ``counts`` (exact integers, any float
+    or int dtype), the current ``assignment``, liveness ``node_mask``,
+    pre-drawn tie-break ``noise`` (same shape as counts) and Bernoulli
+    damping ``gate``, returns ``(target, willing, gain)``:
+
+      target  — desired partition per vertex (the greedy rule)
+      willing — wants to move AND survived damping
+      gain    — best_count − current_count (≥ 0; diagnostic)
+
+    ``tie_break="random"``: argmax of ``counts + noise`` (a < 1 gap means
+    only ties shuffle). ``tie_break="stay"``: prefer the current partition
+    whenever it is among the argmax set; noise is ignored.
+    """
+    k = counts.shape[1]
+    c = counts.astype(jnp.float32)
+    cur = jnp.clip(assignment, 0, k - 1)
+    cur_count = jnp.take_along_axis(c, cur[:, None], axis=1)[:, 0]
+    best_count = jnp.max(c, axis=1)
+    isolated = (best_count == 0) | ~node_mask
+    if tie_break == "stay":
+        stay = (cur_count >= best_count) | isolated
+        target = jnp.where(stay, cur, jnp.argmax(c, axis=1).astype(jnp.int32))
+    elif tie_break == "random":
+        score = c + noise
+        target = jnp.argmax(score, axis=1).astype(jnp.int32)
+        target = jnp.where(isolated, cur, target)
+    else:
+        raise ValueError(f"unknown tie_break {tie_break!r}")
+    willing = (target != assignment) & node_mask & gate
+    gain = (best_count - cur_count).astype(jnp.float32)
+    return target, willing, gain
+
+
 def ref_embedding_bag(table: jax.Array, indices: jax.Array,
                       combine: str = "sum") -> jax.Array:
     """(V,D) table, (B,n_hot) indices (−1 pad) → (B,D)."""

@@ -64,13 +64,16 @@ class Scenario:
 
     def system_config(self, *, strategy: str = "xdgp",
                       seed: Optional[int] = None,
-                      recompute_every: int = 8) -> SystemConfig:
+                      recompute_every: int = 8,
+                      backend: str = "auto") -> SystemConfig:
         """The session config for this scenario.
 
         ``strategy="xdgp"`` is the system under test (online placement of
         arrivals + interleaved migration); swapping the field to
         ``"static"`` yields the paper's static-hash baseline — no other
-        change anywhere.
+        change anywhere. ``backend`` selects the migration-scoring
+        implementation (``"ref"``/``"pallas"``/``"auto"``, DESIGN.md §9);
+        both produce bit-identical runs.
         """
         return SystemConfig(
             graph=GraphSection(n_cap=self.graph.n_cap, e_cap=self.graph.e_cap),
@@ -81,7 +84,8 @@ class Scenario:
             partition=PartitionSection(strategy=strategy, k=self.k,
                                        adapt_iters=self.adapt_iters),
             compute=ComputeSection(program=self.program,
-                                   payload_scale=self.payload_scale),
+                                   payload_scale=self.payload_scale,
+                                   backend=backend),
             telemetry=TelemetrySection(recompute_every=recompute_every),
             seed=self.seed if seed is None else seed)
 

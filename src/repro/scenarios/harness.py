@@ -28,31 +28,34 @@ __all__ = ["CostModel", "bsr_snapshot", "compare_scenario",
            "partition_relabelled", "run_scenario"]
 
 
-def _system(scn: Scenario, *, strategy: str,
-            seed: Optional[int] = None) -> DynamicGraphSystem:
+def _system(scn: Scenario, *, strategy: str, seed: Optional[int] = None,
+            backend: str = "auto") -> DynamicGraphSystem:
     return DynamicGraphSystem(scn.graph,
-                              scn.system_config(strategy=strategy, seed=seed))
+                              scn.system_config(strategy=strategy, seed=seed,
+                                                backend=backend))
 
 
 def run_scenario(scn: Scenario, *, adaptive: bool,
                  max_supersteps: Optional[int] = None, bsr_blk: int = 32,
                  cost: Optional[CostModel] = None, seed: Optional[int] = None,
-                 ) -> Dict:
+                 backend: str = "auto") -> Dict:
     """Drive the scenario through the system; return the measured run row."""
-    system = _system(scn, strategy="xdgp" if adaptive else "static", seed=seed)
+    system = _system(scn, strategy="xdgp" if adaptive else "static",
+                     seed=seed, backend=backend)
     system.run(scn, max_supersteps=max_supersteps)
     return system.score(cost=cost, bsr_blk=bsr_blk)
 
 
 def compare_scenario(scn: Scenario, *, max_supersteps: Optional[int] = None,
                      bsr_blk: int = 32, cost: Optional[CostModel] = None,
-                     seed: Optional[int] = None) -> Dict:
+                     seed: Optional[int] = None, backend: str = "auto") -> Dict:
     """Adaptive vs. static-hash on the identical stream (paper's comparison).
 
     ``seed`` varies the system's own randomness (placement tie noise,
     migration damping) independently of the stream, which stays pinned to
-    the scenario's seed."""
-    system = _system(scn, strategy="xdgp", seed=seed)
+    the scenario's seed. ``backend`` selects the migration-scoring path
+    (DESIGN.md §9) — bit-identical results either way."""
+    system = _system(scn, strategy="xdgp", seed=seed, backend=backend)
     return system.compare(scn, baseline="static",
                           max_supersteps=max_supersteps, bsr_blk=bsr_blk,
                           cost=cost)
