@@ -1,12 +1,18 @@
-"""Elastic failure recovery: lose 2 of 16 workers mid-computation, re-home
-orphaned vertices, and let the adaptive heuristic re-converge placement —
-beyond the paper's snapshot-restore (§4.3).
+"""Elastic failure recovery as session operations: snapshot the healthy
+cluster, lose 2 of 16 workers mid-computation, re-home orphaned vertices
+and let the adaptive heuristic re-converge — then restore the snapshot to
+show the paper's §4.3 snapshot-restore path as well. All through the
+``repro.api`` cluster lifecycle (``save`` / ``rescale`` / ``restore``),
+no raw ``elastic_rescale`` plumbing.
 
   PYTHONPATH=src python examples/elastic_recovery.py
 """
+import tempfile
+
+import numpy as np
+
 from repro.api import DynamicGraphSystem, PartitionSection, SystemConfig
 from repro.graph import generators
-from repro.runtime import elastic_rescale
 
 
 def main() -> None:
@@ -15,22 +21,35 @@ def main() -> None:
     system = DynamicGraphSystem(g, SystemConfig(
         partition=PartitionSection(strategy="xdgp", k=k, slack=0.1)))
     system.adapt(120)
-    print(f"healthy cluster (k=16): cut={system.snapshot()['cut_ratio']:.3f}")
+    healthy = system.snapshot()
+    print(f"healthy cluster (k=16): cut={healthy['cut_ratio']:.3f}")
 
-    # two workers die
-    assignment, hist, report = elastic_rescale(
-        g, system.labels, old_k=16, new_k=14, lost=(3, 11), adapt_iters=80)
-    print(f"after losing workers 3,11 -> rehash orphans: "
-          f"cut={report['cut_after_rehash']:.3f}")
-    print(f"after re-adaptation (k=14): cut={report['cut_after_adapt']:.3f} "
-          f"({report['migrations']} migrations)")
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # checkpoint the healthy session (paper §4.3: snapshot for recovery)
+        step = system.save(ckpt_dir)
+        print(f"checkpointed session at step {step} -> {ckpt_dir}")
 
-    # capacity scales down with the cluster: verify balance
-    import numpy as np
-    occ = np.bincount(np.asarray(assignment)[np.asarray(g.node_mask)],
-                      minlength=14)
-    print(f"occupancy: min={occ.min()} max={occ.max()} "
-          f"(ideal {int(g.num_nodes)//14})")
+        # two workers die: one session op re-homes orphans by hash and
+        # re-adapts with the same heuristic on the surviving partitions
+        report = system.rescale(14, lost=(3, 11), adapt_iters=80)
+        print(f"after losing workers 3,11 -> rehash orphans: "
+              f"cut={report['cut_after_rehash']:.3f}")
+        print(f"after re-adaptation (k=14): "
+              f"cut={report['cut_after_adapt']:.3f} "
+              f"({report['migrations']} migrations)")
+
+        # capacity scales down with the cluster: verify balance
+        occ = np.asarray(system.tracker.occupancy)
+        print(f"occupancy: min={occ.min()} max={occ.max()} "
+              f"(ideal {int(g.num_nodes) // 14})")
+        assert (occ <= np.asarray(system.state.capacity)).all()
+
+        # the paper's literal recovery: restore the pre-failure snapshot
+        restored = DynamicGraphSystem.restore(ckpt_dir)
+        snap = restored.snapshot()
+        print(f"restored healthy snapshot: k={snap['k']} "
+              f"cut={snap['cut_ratio']:.3f} "
+              f"(matches: {abs(snap['cut_ratio'] - healthy['cut_ratio']) < 1e-9})")
 
 
 if __name__ == "__main__":

@@ -1,21 +1,30 @@
 """repro.api — the one front door to the xDGP runtime.
 
-Three pieces (DESIGN.md §8):
+Four pieces (DESIGN.md §8, §10):
 
   * ``PartitionStrategy`` — pluggable partitioning policy (init / place /
     adapt hooks) with a registry: ``static``, ``hash``, ``random``, ``dgr``,
     ``mnn``, ``fennel``, ``xdgp`` (+ seed-era aliases).
-  * ``SystemConfig`` — layered graph/stream/partition/compute/telemetry
-    sections, ``to_dict``/``from_dict`` round-trip.
+  * ``ExecutionBackend`` — pluggable execution layer (``local`` |
+    ``sharded``) deciding *where* the adaptation runs: on-host, or
+    partition-per-device SPMD with bit-identical assignments.
+  * ``SystemConfig`` — layered graph/stream/partition/compute/cluster/
+    telemetry sections, ``to_dict``/``from_dict`` round-trip.
   * ``DynamicGraphSystem`` — the session: ``step``/``run`` (streaming),
     ``converge``/``adapt`` (batch), ``snapshot``/``score``/``compare``
-    (measurement).
+    (measurement), ``distribute``/``gather``/``rescale``/``save``/
+    ``restore`` (cluster lifecycle).
 
 ``__all__`` is the frozen public surface, pinned by the API snapshot test —
 extend it deliberately, never accidentally.
 """
-from repro.api.config import (ComputeSection, GraphSection, PartitionSection,
-                              StreamSection, SystemConfig, TelemetrySection)
+from repro.api.backend import (ExecutionBackend, LocalBackend, ShardedBackend,
+                               execution_backend_names,
+                               register_execution_backend,
+                               resolve_execution_backend)
+from repro.api.config import (ClusterSection, ComputeSection, GraphSection,
+                              PartitionSection, StreamSection, SystemConfig,
+                              TelemetrySection)
 from repro.api.strategy import (Block, Dgr, Hash, Mnn, Modulo, OnlineFennel,
                                 PartitionStrategy, Random, Static,
                                 StrategyContext, XdgpAdaptive,
@@ -29,13 +38,17 @@ from repro.core.vertex_program import CostModel
 __all__ = [
     # config
     "SystemConfig", "GraphSection", "StreamSection", "PartitionSection",
-    "ComputeSection", "TelemetrySection",
+    "ComputeSection", "ClusterSection", "TelemetrySection",
     # strategy protocol + registry
     "PartitionStrategy", "StrategyContext",
     "register_strategy", "resolve_strategy", "strategy_names",
     # shipped strategies
     "Static", "Hash", "Random", "Modulo", "Block", "Dgr", "Mnn",
     "OnlineFennel", "XdgpAdaptive",
+    # execution backends
+    "ExecutionBackend", "LocalBackend", "ShardedBackend",
+    "register_execution_backend", "resolve_execution_backend",
+    "execution_backend_names",
     # session + measurement
     "DynamicGraphSystem", "SuperstepRecord", "History", "CostModel",
     "empty_graph", "bsr_snapshot", "partition_relabelled",

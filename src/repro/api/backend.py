@@ -1,0 +1,343 @@
+"""Pluggable execution backends: where does a session's adaptation run?
+
+The ``PartitionStrategy`` decides *what* the heuristic does; the
+``ExecutionBackend`` decides *where* it executes (DESIGN.md §10):
+
+  local    — on-host, delegating straight to the strategy hooks (the
+             single-process path every session used before this layer).
+  sharded  — partition-per-device SPMD through the cluster engine in
+             ``core.distributed``: labels travel by boundary-segment halo
+             exchange, capacity by an O(k) psum, and quota ranking by a
+             globally-ordered gather — with assignments bit-identical to
+             the local path (pinned by the cluster parity suite), plus
+             per-device halo/collective byte counters so "cut == comm
+             volume" is measurable from the session.
+
+Backends register under a name, exactly like strategies; ``SystemConfig``
+selects one via ``cluster.backend`` and ``DynamicGraphSystem.distribute()``
+/ ``.gather()`` move a live session between them.
+
+Example — resolve backends from the registry (doctested in CI):
+
+    >>> from repro.api import (ClusterSection, execution_backend_names,
+    ...                        resolve_execution_backend)
+    >>> execution_backend_names()
+    ('local', 'sharded')
+    >>> resolve_execution_backend("local").name
+    'local'
+    >>> cl = ClusterSection(backend="sharded", devices=4)
+    >>> resolve_execution_backend("sharded", cluster=cl).cluster.devices
+    4
+    >>> try:
+    ...     resolve_execution_backend("shardedd")
+    ... except ValueError as e:
+    ...     "execution backends" in str(e)
+    True
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.api.config import ClusterSection
+from repro.api.strategy import StrategyContext
+from repro.core.distributed import (BlockLayout, DistGraph,
+                                    build_cluster_graph, comm_model,
+                                    make_cluster_migrator)
+from repro.core.migration import MigrationStats, flush_pending
+from repro.core.partition_state import PartitionState
+from repro.core.repartitioner import History
+from repro.core.repartitioner import adapt_rounds as _adapt_rounds
+from repro.core.repartitioner import run_to_convergence as _run_to_convergence
+from repro.graph.structure import Graph
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """Structural protocol — anything with these hooks executes a session.
+
+    The three execution hooks mirror the strategy surface the session
+    drives (interleaved ``adapt`` per superstep, batch ``converge`` /
+    ``adapt_rounds``); the two telemetry hooks feed the session's comm
+    counters. A backend receives the *strategy* so non-migrating policies
+    can stay on their (free) local hooks.
+    """
+
+    name: str
+
+    def adapt(self, strategy: Any, graph: Graph, state: PartitionState,
+              ctx: StrategyContext) -> PartitionState: ...
+
+    def converge(self, strategy: Any, graph: Graph, state: PartitionState,
+                 ctx: StrategyContext) -> Tuple[PartitionState, History]: ...
+
+    def adapt_rounds(self, strategy: Any, graph: Graph, state: PartitionState,
+                     iters: int, ctx: StrategyContext,
+                     ) -> Tuple[PartitionState, History]: ...
+
+    def pop_superstep_comm(self) -> Dict[str, int]: ...
+
+    def device_stats(self) -> Optional[Dict[str, Any]]: ...
+
+
+# ---------------------------------------------------------------------------
+# Registry (same contract as the strategy registry: fail loudly on typos)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., Any]] = {}
+
+
+def register_execution_backend(name: str, *aliases: str
+                               ) -> Callable[[Callable[..., Any]],
+                                             Callable[..., Any]]:
+    """Class decorator: register a backend factory under ``name`` (+aliases)."""
+
+    def deco(factory: Callable[..., Any]) -> Callable[..., Any]:
+        for key in (name, *aliases):
+            if key in _REGISTRY:
+                raise ValueError(f"execution backend {key!r} already registered")
+            _REGISTRY[key] = factory
+        return factory
+
+    return deco
+
+
+def execution_backend_names() -> Tuple[str, ...]:
+    """Every registered backend name, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_execution_backend(spec: Any,
+                              cluster: Optional[ClusterSection] = None) -> Any:
+    """Turn a registry name, backend class, or instance into an instance."""
+    if isinstance(spec, str):
+        try:
+            factory = _REGISTRY[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown execution backend {spec!r}; registered execution "
+                f"backends: {', '.join(execution_backend_names())}") from None
+        return factory(cluster=cluster)
+    if isinstance(spec, type):
+        return spec(cluster=cluster)
+    return spec
+
+
+_ZERO_COMM = {"halo_bytes": 0, "collective_bytes": 0}
+
+
+@register_execution_backend("local")
+class LocalBackend:
+    """On-host execution: straight delegation to the strategy hooks."""
+
+    name = "local"
+
+    def __init__(self, cluster: Optional[ClusterSection] = None):
+        self.cluster = cluster if cluster is not None else ClusterSection()
+
+    def adapt(self, strategy, graph, state, ctx):
+        return strategy.adapt(graph, state, ctx)
+
+    def converge(self, strategy, graph, state, ctx):
+        return strategy.converge(graph, state, ctx)
+
+    def adapt_rounds(self, strategy, graph, state, iters, ctx):
+        return strategy.adapt_rounds(graph, state, iters, ctx)
+
+    def pop_superstep_comm(self) -> Dict[str, int]:
+        return dict(_ZERO_COMM)
+
+    def device_stats(self) -> Optional[Dict[str, Any]]:
+        return None
+
+    def invalidate(self) -> None:
+        pass
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+@register_execution_backend("sharded")
+class ShardedBackend:
+    """Partition-per-device SPMD execution over the cluster engine.
+
+    The session keeps its canonical arrays in slot order; this backend
+    buckets the graph into device blocks (``build_cluster_graph``, rebuilt
+    whenever the graph object changes — once per streaming superstep, once
+    per batch call), runs the parity migrator under ``shard_map``, and maps
+    assignments back. Strategies with ``adapts=False`` fall through to
+    their local hooks (there is nothing to distribute).
+
+    Decision parity with the local path is exact — same RNG draws, same
+    quota order — so ``distribute()``/``gather()`` can move a session
+    mid-run without perturbing its trajectory.
+    """
+
+    name = "sharded"
+
+    def __init__(self, cluster: Optional[ClusterSection] = None):
+        self.cluster = (cluster if cluster is not None
+                        else ClusterSection(backend="sharded"))
+        self._mesh: Optional[jax.sharding.Mesh] = None
+        self._mesh_devices = 0
+        self._graph_ref: Optional[Graph] = None
+        self._dg: Optional[DistGraph] = None
+        self._layout: Optional[BlockLayout] = None
+        self._comm: Optional[Dict[str, Any]] = None
+        self._migrators: Dict[Tuple[float, str], Any] = {}
+        self._superstep_comm = dict(_ZERO_COMM)
+        self._total_comm = dict(_ZERO_COMM)
+        self._total_iterations = 0
+
+    # -- mesh / bucketing lifecycle ----------------------------------------
+    def required_devices(self, k: int) -> int:
+        """Device count this backend will run ``k`` partitions on."""
+        P = self.cluster.devices or k
+        if P != k:
+            raise ValueError(
+                f"sharded backend is partition-per-device: cluster.devices "
+                f"({P}) must equal partition.k ({k}) or be 0")
+        avail = len(jax.devices())
+        if P > avail:
+            raise RuntimeError(
+                f"sharded backend needs {P} devices but only {avail} are "
+                f"visible; on CPU hosts launch with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={P}")
+        return P
+
+    def invalidate(self) -> None:
+        """Drop bucketing/mesh caches (k-change, restore); totals survive."""
+        self._mesh = None
+        self._mesh_devices = 0
+        self._graph_ref = None
+        self._dg = self._layout = self._comm = None
+        self._migrators.clear()
+
+    def _ensure(self, graph: Graph, state: PartitionState,
+                ctx: StrategyContext) -> None:
+        P = self.required_devices(ctx.k)
+        if self._mesh is None or self._mesh_devices != P:
+            devs = np.asarray(jax.devices()[:P])
+            self._mesh = jax.sharding.Mesh(devs, (self.cluster.axis,))
+            self._mesh_devices = P
+            self._graph_ref = None            # block size may change with P
+        if self._graph_ref is not graph:
+            self._dg, self._layout = build_cluster_graph(
+                graph, np.asarray(state.assignment), P,
+                halo_pad=self.cluster.halo_pad)
+            self._comm = comm_model(self._dg, ctx.k)
+            self._migrators.clear()
+            self._graph_ref = graph
+
+    def _charge(self, iters: int = 1) -> None:
+        c = self._comm
+        P = c["devices"]
+        halo = iters * P * c["halo_bytes_per_device"]
+        coll = iters * P * c["collective_bytes_per_device"]
+        for acc in (self._superstep_comm, self._total_comm):
+            acc["halo_bytes"] += halo
+            acc["collective_bytes"] += coll
+        self._total_iterations += iters
+
+    def _step_fn(self, graph: Graph, ctx: StrategyContext,
+                 unshard_each: bool = False):
+        """state -> (state, MigrationStats) over the cluster engine, in the
+        session's canonical slot order (plugs into the shared drivers).
+        The migrator handles the slot↔block permutation on device, so one
+        iteration is one jit dispatch — no host round-trips.
+
+        ``unshard_each`` places every returned state back on the default
+        device: the batch drivers interleave the step with single-device
+        jits (cut history, flush) that must not see this mesh's sharding.
+        The streaming ``adapt`` loop keeps the state mesh-resident instead
+        and unshards once at the end."""
+        key = (ctx.s, ctx.tie_break)
+        mig = self._migrators.get(key)
+        if mig is None:
+            mig = make_cluster_migrator(self._mesh, self._dg, self._layout,
+                                        ctx.k, s=ctx.s,
+                                        tie_break=ctx.tie_break,
+                                        axis=self.cluster.axis)
+            self._migrators[key] = mig
+
+        def step(state: PartitionState):
+            a, p, rng, (committed, willing, admitted) = mig(
+                state.assignment, state.pending, state.rng, state.capacity)
+            self._charge(1)
+            new_state = PartitionState(
+                assignment=a, pending=p, capacity=state.capacity, rng=rng,
+                iteration=state.iteration + 1, last_moves=committed)
+            if unshard_each:
+                new_state = self._unshard(new_state)
+            return new_state, MigrationStats(committed=committed,
+                                             willing=willing,
+                                             admitted=admitted)
+
+        return step
+
+    @staticmethod
+    def _unshard(state: PartitionState) -> PartitionState:
+        """Place the final state back on the default device: the session's
+        own jits (tracker updates, vertex program) must not inherit this
+        mesh's sharding — it may be gone after a gather()/rescale()."""
+        return jax.device_put(state, jax.devices()[0])
+
+    # -- execution hooks ----------------------------------------------------
+    def adapt(self, strategy, graph, state, ctx):
+        if not getattr(strategy, "adapts", False):
+            return strategy.adapt(graph, state, ctx)
+        self._ensure(graph, state, ctx)
+        step = self._step_fn(graph, ctx)
+        for _ in range(ctx.adapt_iters):
+            state, _ = step(state)
+        return flush_pending(self._unshard(state), graph)
+
+    def converge(self, strategy, graph, state, ctx):
+        if not getattr(strategy, "adapts", False):
+            return strategy.converge(graph, state, ctx)
+        self._ensure(graph, state, ctx)
+        state, hist = _run_to_convergence(
+            graph, state, s=ctx.s, patience=ctx.patience,
+            max_iters=ctx.max_iters, tie_break=ctx.tie_break,
+            rel_tol=ctx.rel_tol, record_history=ctx.record_history,
+            step_fn=self._step_fn(graph, ctx, unshard_each=True))
+        return state, hist
+
+    def adapt_rounds(self, strategy, graph, state, iters, ctx):
+        if not getattr(strategy, "adapts", False):
+            return strategy.adapt_rounds(graph, state, iters, ctx)
+        self._ensure(graph, state, ctx)
+        state, hist = _adapt_rounds(graph, state, iters,
+                                    record_history=ctx.record_history,
+                                    step_fn=self._step_fn(graph, ctx,
+                                                          unshard_each=True))
+        return state, hist
+
+    # -- telemetry ----------------------------------------------------------
+    def pop_superstep_comm(self) -> Dict[str, int]:
+        out, self._superstep_comm = self._superstep_comm, dict(_ZERO_COMM)
+        return out
+
+    def device_stats(self) -> Optional[Dict[str, Any]]:
+        """Per-device view of the comm bill (None before the first run)."""
+        if self._comm is None:
+            return None
+        c = self._comm
+        return {
+            "devices": c["devices"],
+            "halo_slots": c["halo_slots"],
+            "boundary_live_per_device": c["boundary_live_per_device"],
+            "halo_bytes_per_iter_per_device": c["halo_bytes_per_device"],
+            "halo_live_bytes_per_iter_per_device":
+                c["halo_live_bytes_per_device"],
+            "collective_bytes_per_iter_per_device":
+                c["collective_bytes_per_device"],
+            "halo_bytes_total": self._total_comm["halo_bytes"],
+            "collective_bytes_total": self._total_comm["collective_bytes"],
+            "iterations_total": self._total_iterations,
+        }
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r} {self.cluster!r}>"

@@ -7,6 +7,8 @@
   stream     — ingestion: window, batching, backpressure caps, dedupe
   partition  — the strategy name plus every partitioning knob it may read
   compute    — interleaved vertex program + the §5.3 execution-cost model
+  cluster    — execution backend (local | sharded), mesh axis/devices, halo
+               padding policy (DESIGN.md §10)
   telemetry  — drift-check cadence and snapshot tiling
 
 Every field is a JSON-compatible scalar, so ``to_dict``/``from_dict``
@@ -17,7 +19,7 @@ the message (the same fail-loudly contract as the strategy registry).
 Example — build a config, round-trip it through plain JSON data, and swap
 the strategy for the baseline comparison (doctested in CI):
 
-    >>> from repro.api import PartitionSection, SystemConfig
+    >>> from repro.api import ClusterSection, PartitionSection, SystemConfig
     >>> cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=4))
     >>> cfg.partition.k
     4
@@ -27,6 +29,10 @@ the strategy for the baseline comparison (doctested in CI):
     'static'
     >>> cfg.compute.backend           # migration scoring path (DESIGN.md §9)
     'auto'
+    >>> cfg.cluster.backend           # execution backend (DESIGN.md §10)
+    'local'
+    >>> ClusterSection(backend="sharded").devices   # 0 = partition-per-device
+    0
     >>> try:
     ...     SystemConfig.from_dict({"partitoin": {}})
     ... except ValueError as e:
@@ -89,6 +95,33 @@ class ComputeSection:
 
 
 @dataclasses.dataclass(frozen=True)
+class ClusterSection:
+    """Execution-layer knobs: where does the session's adaptation run?
+
+    ``backend="local"`` executes on-host (the default); ``"sharded"``
+    executes partition-per-device SPMD through the cluster engine in
+    ``core.distributed`` — same assignments bit for bit, plus per-device
+    halo/collective byte telemetry (DESIGN.md §10).
+    """
+
+    backend: str = "local"         # execution backend registry name
+    axis: str = "nodes"            # mesh axis name the node dimension shards on
+    devices: int = 0               # device-count override (0 = k, one
+                                   # partition per device)
+    halo_pad: float = 0.0          # halo padding policy: fractional head-room
+                                   # over the largest boundary segment
+
+    def __post_init__(self):
+        # fail at the knob, not with a broadcast error deep in the bucketing
+        if self.halo_pad < 0:
+            raise ValueError(f"cluster.halo_pad must be >= 0 (head-room over "
+                             f"the largest boundary), got {self.halo_pad}")
+        if self.devices < 0:
+            raise ValueError(f"cluster.devices must be >= 0 (0 = one device "
+                             f"per partition), got {self.devices}")
+
+
+@dataclasses.dataclass(frozen=True)
 class TelemetrySection:
     """Measurement-side knobs."""
 
@@ -101,6 +134,7 @@ _SECTIONS = {
     "stream": StreamSection,
     "partition": PartitionSection,
     "compute": ComputeSection,
+    "cluster": ClusterSection,
     "telemetry": TelemetrySection,
 }
 
@@ -113,6 +147,7 @@ class SystemConfig:
     stream: StreamSection = dataclasses.field(default_factory=StreamSection)
     partition: PartitionSection = dataclasses.field(default_factory=PartitionSection)
     compute: ComputeSection = dataclasses.field(default_factory=ComputeSection)
+    cluster: ClusterSection = dataclasses.field(default_factory=ClusterSection)
     telemetry: TelemetrySection = dataclasses.field(default_factory=TelemetrySection)
     seed: int = 0                  # session randomness (placement ties, damping)
 
@@ -153,3 +188,9 @@ class SystemConfig:
 
     def with_seed(self, seed: int) -> "SystemConfig":
         return dataclasses.replace(self, seed=int(seed))
+
+    def with_cluster(self, **changes: Any) -> "SystemConfig":
+        """Same config, different execution-layer knobs — the one-section
+        swap that moves a session between local and sharded execution."""
+        return dataclasses.replace(
+            self, cluster=dataclasses.replace(self.cluster, **changes))

@@ -162,9 +162,16 @@ def resolve_strategy(spec: Any, **kwargs: Any) -> "StrategyBase":
 
 class StrategyBase:
     """Default behaviour: hash init, arrivals inherit their padded-slot
-    label, and no adaptation. Subclasses override the hooks they care about."""
+    label, and no adaptation. Subclasses override the hooks they care about.
+
+    ``adapts`` tells the execution backend whether the strategy's
+    adaptation hooks do real migration work: the sharded backend executes
+    xDGP-style migration through the cluster engine, and falls back to the
+    (free, no-op) local hooks for strategies that never migrate.
+    """
 
     name = "base"
+    adapts = False                 # True → adapt/converge run migrations
 
     def init(self, graph: Graph, k: int) -> jax.Array:
         return hash_partition(graph, k)
@@ -297,6 +304,7 @@ class XdgpAdaptive(OnlineFennel):
     """
 
     name = "xdgp"
+    adapts = True
 
     def __init__(self, placement: str = "online", passes: Optional[int] = None):
         if placement not in ("online", "inherit"):

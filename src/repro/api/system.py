@@ -34,11 +34,21 @@ harness's hand-wired dual run (comparison):
   score()             cost-model scoring of the telemetry (paper §5.3)
   compare(stream)     dual run vs. a baseline strategy on the same stream
 
+plus the cluster lifecycle (DESIGN.md §10):
+
+  distribute()        execute on the "sharded" backend (partition-per-device)
+  gather()            return to on-host execution
+  rescale(new_k)      elastic k-change: re-home orphans, re-adapt, report
+  save(path)          checkpoint the whole session (atomic, resumable)
+  restore(path)       class method: resume a saved session mid-run
+
 Swapping ``config.partition.strategy`` between ``"xdgp"`` and ``"static"``
 reproduces the paper's adaptive-vs-static-hash comparison with no other
 code changes; ``config.compute.backend`` independently selects the
 migration-scoring implementation (fused kernels vs the unfused reference —
-bit-identical results, DESIGN.md §9).
+bit-identical results, DESIGN.md §9); ``config.cluster.backend`` selects
+the execution layer (on-host vs shard_map SPMD — bit-identical again,
+DESIGN.md §10).
 
 Example — batch-adapt a static mesh to quiescence (doctested in CI):
 
@@ -54,6 +64,15 @@ Example — batch-adapt a static mesh to quiescence (doctested in CI):
     >>> snap = system.snapshot()
     >>> snap["nodes"], snap["k"]
     (64, 4)
+
+    Sessions checkpoint and resume as one operation (DESIGN.md §10):
+
+    >>> import tempfile
+    >>> with tempfile.TemporaryDirectory() as ckpt:
+    ...     _ = system.save(ckpt)
+    ...     resumed = DynamicGraphSystem.restore(ckpt)
+    >>> resumed.cut_ratio == system.cut_ratio
+    True
 """
 from __future__ import annotations
 
@@ -65,8 +84,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.backend import resolve_execution_backend
 from repro.api.config import SystemConfig
 from repro.api.strategy import StrategyContext, resolve_strategy
+from repro.checkpoint import Checkpointer
 from repro.core.partition_state import PartitionState, default_capacity, make_state
 from repro.core.repartitioner import History
 from repro.core.vertex_program import (CostModel, VertexProgram, make_program,
@@ -75,7 +96,9 @@ from repro.core.vertex_program import superstep as program_superstep
 from repro.api.telemetry import SuperstepRecord
 from repro.graph.bsr import bsr_density_stats, graph_to_bsr
 from repro.graph.structure import Graph, GraphDelta, apply_delta, from_edges
-from repro.stream.ingest import WindowIngestor, stream_batches
+from repro.graph.structure import cut_ratio as graph_cut_ratio
+from repro.stream.ingest import (EdgeStreamBuffer, WindowIngestor,
+                                 stream_batches)
 from repro.stream.metrics import (QualityTracker, cut_ratio_of, delta_update,
                                   drift_check, imbalance_of, init_tracker,
                                   move_update)
@@ -159,10 +182,17 @@ class DynamicGraphSystem:
         p = cfg.partition
         self.strategy = resolve_strategy(strategy if strategy is not None
                                          else p.strategy)
+        self.backend = resolve_execution_backend(cfg.cluster.backend,
+                                                 cluster=cfg.cluster)
         # remembered so compare() can replay identical fresh sessions
         self._initial_graph = graph
         self._initial_assignment = assignment
         self._program_arg = program
+        # a constructor-override strategy/program cannot be rebuilt from the
+        # config alone — save() records the fact so restore() can insist on
+        # being handed the same objects back
+        self._strategy_override = strategy is not None
+        self._program_override = program is not None
 
         self.graph = graph
         if assignment is None:
@@ -279,11 +309,13 @@ class DynamicGraphSystem:
             self.tracker, _ = delta_update(self.tracker, before, after,
                                            labels_before, labels_placed)
 
-        # 4. ADAPT: the strategy's interleaved rounds on the new graph
+        # 4. ADAPT: the strategy's interleaved rounds on the new graph,
+        # executed wherever the session's backend runs (local / sharded)
         state = dataclasses.replace(self.state, assignment=labels_placed)
-        state = self.strategy.adapt(after, state, self._ctx())
+        state = self.backend.adapt(self.strategy, after, state, self._ctx())
         self.tracker, moved = move_update(self.tracker, after,
                                           labels_placed, state.assignment)
+        comm = self.backend.pop_superstep_comm()
 
         self.graph = after
         self.state = state
@@ -338,6 +370,8 @@ class DynamicGraphSystem:
             dup_dropped=istats.dup_dropped,
             local_bytes=local_bytes, remote_bytes=remote_bytes,
             compute_seconds=compute_seconds,
+            halo_bytes=comm["halo_bytes"],
+            collective_bytes=comm["collective_bytes"],
         )
         self.telemetry.append(record)
         return record
@@ -379,22 +413,25 @@ class DynamicGraphSystem:
     def converge(self, *, record_history: bool = True) -> History:
         """Adapt the current graph to quiescence (paper's convergence rule)."""
         old = self.state.assignment
-        state, hist = self.strategy.converge(
-            self.graph, self.state, self._ctx(record_history=record_history))
+        state, hist = self.backend.converge(
+            self.strategy, self.graph, self.state,
+            self._ctx(record_history=record_history))
         self.tracker, _ = move_update(self.tracker, self.graph, old,
                                       state.assignment)
         self.state = state
+        self.backend.pop_superstep_comm()   # batch comm lands in the totals
         return hist
 
     def adapt(self, iters: int, *, record_history: bool = True) -> History:
         """A fixed number of adaptation rounds on the current graph."""
         old = self.state.assignment
-        state, hist = self.strategy.adapt_rounds(
-            self.graph, self.state, iters,
+        state, hist = self.backend.adapt_rounds(
+            self.strategy, self.graph, self.state, iters,
             self._ctx(record_history=record_history))
         self.tracker, _ = move_update(self.tracker, self.graph, old,
                                       state.assignment)
         self.state = state
+        self.backend.pop_superstep_comm()   # batch comm lands in the totals
         return hist
 
     def inject(self, delta: GraphDelta) -> int:
@@ -417,12 +454,254 @@ class DynamicGraphSystem:
         self.state = dataclasses.replace(self.state, assignment=labels)
         return placed
 
+    # -- cluster lifecycle (DESIGN.md §10) -----------------------------------
+    def _swap_backend(self, backend_name: str, **cluster_changes: Any) -> None:
+        """Atomically move to another backend: resolve and validate the
+        candidate first, commit config + backend only if that succeeds."""
+        cfg = self.config.with_cluster(backend=backend_name,
+                                       **cluster_changes)
+        if self.backend.name == backend_name:
+            # same backend class: keep the instance (and its cumulative
+            # comm totals), just refresh its knobs and drop stale caches
+            self.backend.cluster = cfg.cluster
+            self.backend.invalidate()
+        else:
+            self.backend = resolve_execution_backend(backend_name,
+                                                     cluster=cfg.cluster)
+        self.config = cfg
+
+    def distribute(self, *, devices: Optional[int] = None,
+                   ) -> "DynamicGraphSystem":
+        """Move the session onto the sharded backend (partition-per-device
+        SPMD via the cluster engine). Validates device availability eagerly
+        so a missing ``XLA_FLAGS`` fails here — with the session left
+        untouched on its current backend — not at the next superstep.
+        The adaptation trajectory is unchanged — the sharded engine is
+        decision-identical to the local one (DESIGN.md §10)."""
+        changes = {} if devices is None else {"devices": int(devices)}
+        cfg = self.config.with_cluster(backend="sharded", **changes)
+        candidate = resolve_execution_backend("sharded", cluster=cfg.cluster)
+        candidate.required_devices(self.config.partition.k)   # may raise
+        if self.backend.name == "sharded":
+            # already sharded: keep the instance (cumulative comm totals),
+            # refresh its knobs and drop caches built for the old config
+            self.backend.cluster = cfg.cluster
+            self.backend.invalidate()
+        else:
+            self.backend = candidate          # the validated instance
+        self.config = cfg
+        return self
+
+    def gather(self) -> "DynamicGraphSystem":
+        """Return the session to on-host execution. The session's canonical
+        arrays never left slot order, so this is a pure backend swap."""
+        self._swap_backend("local")
+        return self
+
+    def rescale(self, new_k: int, *, lost: Optional[Tuple[int, ...]] = None,
+                adapt_iters: int = 60) -> Dict:
+        """Elastic k-change: workers joined (``new_k > k``) or died.
+
+        Orphaned vertices are re-homed by hash (``runtime.elastic``), the
+        session re-provisions capacity for the new partition count, and the
+        strategy re-adapts on the session's own backend — the paper's §4.3
+        recovery story promoted to one session operation. Returns the
+        ``elastic_rescale`` report (cut before/after, migrations)."""
+        from repro.runtime.elastic import rescale_assignment
+
+        old_k = self.config.partition.k
+        # validate the post-rescale cluster BEFORE mutating anything: a
+        # sharded session needs one device per new partition, and failing
+        # mid-rescale would leave the session half-rewritten and unusable
+        cl = self.config.cluster
+        if cl.devices not in (0, int(new_k)):
+            cl = dataclasses.replace(cl, devices=0)
+        probe = resolve_execution_backend(cl.backend, cluster=cl)
+        if hasattr(probe, "required_devices"):
+            probe.required_devices(int(new_k))                # may raise
+        a0 = rescale_assignment(self.labels, old_k, int(new_k), lost)
+        cut_rehash = float(graph_cut_ratio(self.graph, a0))
+        p = dataclasses.replace(self.config.partition, k=int(new_k))
+        self.config = dataclasses.replace(self.config, partition=p)
+        if self.config.cluster.devices not in (0, int(new_k)):
+            # a pinned device count cannot survive a k-change (k == P)
+            self.config = self.config.with_cluster(devices=0)
+        capacity = default_capacity(self.graph.n_cap, int(new_k), p.slack)
+        self.state = make_state(self.graph, a0, int(new_k), slack=p.slack,
+                                seed=self.config.seed, capacity=capacity)
+        self.tracker = init_tracker(self.graph, self.state.assignment,
+                                    int(new_k))
+        # a k-change is a mesh change: drop the backend's bucketing/mesh
+        # caches but keep the instance (cumulative comm totals survive)
+        self.backend.cluster = self.config.cluster
+        self.backend.invalidate()
+        hist = self.adapt(adapt_iters)
+        return {"old_k": old_k, "new_k": int(new_k),
+                "cut_after_rehash": cut_rehash,
+                "cut_after_adapt": self.cut_ratio,
+                "migrations": hist.total_migrations}
+
+    # -- checkpoint / restore -------------------------------------------------
+    _CKPT_VERSION = 1
+
+    def _session_arrays(self) -> Dict[str, Any]:
+        """The array pytree the checkpointer persists (fixed key structure —
+        the treedef must match between save and the restore template)."""
+        ing = self.ingestor
+        add_src, add_dst, add_t, dels = ing.buffer.peek_all()
+        prog = (self.program_state if self.program_state is not None
+                else jnp.zeros((0,), jnp.float32))
+        return {
+            "graph": {"src": self.graph.src, "dst": self.graph.dst,
+                      "node_mask": self.graph.node_mask,
+                      "edge_mask": self.graph.edge_mask},
+            "state": {"assignment": self.state.assignment,
+                      "pending": self.state.pending,
+                      "capacity": self.state.capacity,
+                      "rng": self.state.rng,
+                      "iteration": self.state.iteration,
+                      "last_moves": self.state.last_moves},
+            "tracker": {"cut": self.tracker.cut, "edges": self.tracker.edges,
+                        "occupancy": self.tracker.occupancy},
+            "window": {"last_seen": ing.tracker.last_seen,
+                       "live_lo": ing._live_lo, "live_hi": ing._live_hi,
+                       "backlog_add_src": add_src, "backlog_add_dst": add_dst,
+                       "backlog_add_t": add_t, "backlog_dels": dels},
+            "place_key": self._place_key,
+            "program_state": prog,
+        }
+
+    def save(self, path: str, *, step: Optional[int] = None) -> int:
+        """Checkpoint the whole session — graph, partition state, tracker,
+        window/backlog state, telemetry and config — atomically under
+        ``path``. Returns the step id (defaults to the superstep counter).
+        A sharded session checkpoints its canonical slot-order state, so it
+        can be restored on any host and re-``distribute()``-d there."""
+        step = self._superstep if step is None else int(step)
+        extra = {
+            "version": self._CKPT_VERSION,
+            "config": self.config.to_dict(),
+            "strategy": self.strategy.name,
+            "strategy_override": self._strategy_override,
+            "program_override": self._program_override,
+            "has_program": self.program is not None,
+            "superstep": self._superstep,
+            "now": self._now,
+            "run_seconds": self._run_seconds,
+            "telemetry": [dataclasses.asdict(r) for r in self.telemetry],
+        }
+        ckpt = Checkpointer(path, use_async=False)
+        ckpt.save(step, self._session_arrays(), extra=extra)
+        return step
+
+    @classmethod
+    def restore(cls, path: str, *, step: Optional[int] = None,
+                strategy: Any = None,
+                program: Optional[VertexProgram] = None,
+                ) -> "DynamicGraphSystem":
+        """Resume a session saved with :meth:`save` — mid-run: partition
+        state (including deferred moves and the RNG), incremental tracker,
+        window liveness, ingest backlog and telemetry all pick up exactly
+        where the checkpoint left them.
+
+        A session built with constructor overrides (``strategy=`` /
+        ``program=`` instances the config cannot express) must be handed
+        the same overrides here — a checkpoint records only their names,
+        and resuming with a different policy would silently diverge from
+        the saved trajectory, so restore refuses instead."""
+        ckpt = Checkpointer(path, use_async=False)
+        extra = ckpt.read_extra(step)
+        if extra is None or extra.get("version") != cls._CKPT_VERSION:
+            raise ValueError(f"{path} is not a session checkpoint "
+                             f"(missing/incompatible extra.json)")
+        cfg = SystemConfig.from_dict(extra["config"])
+        dummy = jnp.zeros((0,), jnp.float32)
+        template = {
+            "graph": {k: dummy for k in ("src", "dst", "node_mask",
+                                         "edge_mask")},
+            "state": {k: dummy for k in ("assignment", "pending", "capacity",
+                                         "rng", "iteration", "last_moves")},
+            "tracker": {k: dummy for k in ("cut", "edges", "occupancy")},
+            "window": {k: dummy for k in ("last_seen", "live_lo", "live_hi",
+                                          "backlog_add_src",
+                                          "backlog_add_dst", "backlog_add_t",
+                                          "backlog_dels")},
+            "place_key": dummy,
+            "program_state": dummy,
+        }
+        payload, _ = ckpt.restore(template, step)
+        g = payload["graph"]
+        graph = Graph(src=jnp.asarray(g["src"]), dst=jnp.asarray(g["dst"]),
+                      node_mask=jnp.asarray(g["node_mask"]),
+                      edge_mask=jnp.asarray(g["edge_mask"]))
+        if extra.get("strategy_override") and strategy is None:
+            raise ValueError(
+                f"checkpoint was saved from a session built with an "
+                f"explicit strategy override ({extra['strategy']!r}); the "
+                f"config alone cannot rebuild it — pass the same strategy "
+                f"via restore(..., strategy=...)")
+        if extra.get("program_override") and program is None:
+            raise ValueError(
+                "checkpoint was saved from a session built with an explicit "
+                "program override; the config alone cannot rebuild it — "
+                "pass the same program via restore(..., program=...)")
+        st = payload["state"]
+        system = cls(graph, cfg, assignment=jnp.asarray(st["assignment"]),
+                     strategy=strategy, program=program)
+        if system.strategy.name != extra["strategy"]:
+            raise ValueError(
+                f"checkpoint was saved with strategy "
+                f"{extra['strategy']!r} but the restored session resolves "
+                f"to {system.strategy.name!r}; pass the original strategy "
+                f"instance via restore(..., strategy=...)")
+        if extra.get("has_program") and system.program is None:
+            raise ValueError(
+                "checkpoint carries a vertex-program state but the restored "
+                "session has no program (it was passed as a constructor "
+                "override); pass it via restore(..., program=...)")
+        system.state = PartitionState(
+            assignment=jnp.asarray(st["assignment"], jnp.int32),
+            pending=jnp.asarray(st["pending"], jnp.int32),
+            capacity=jnp.asarray(st["capacity"], jnp.int32),
+            rng=jnp.asarray(st["rng"]),
+            iteration=jnp.asarray(st["iteration"], jnp.int32),
+            last_moves=jnp.asarray(st["last_moves"], jnp.int32))
+        tr = payload["tracker"]
+        system.tracker = QualityTracker(
+            cut=jnp.asarray(tr["cut"], jnp.int32),
+            edges=jnp.asarray(tr["edges"], jnp.int32),
+            occupancy=jnp.asarray(tr["occupancy"], jnp.int32))
+        w = payload["window"]
+        ing = system.ingestor
+        # host-side window state must be writable numpy, not device views
+        ing.tracker.last_seen = np.array(w["last_seen"], np.int64)
+        ing._live_lo = np.array(w["live_lo"], np.int64)
+        ing._live_hi = np.array(w["live_hi"], np.int64)
+        ing.buffer = EdgeStreamBuffer(ing.a_cap, ing.d_cap)
+        if np.asarray(w["backlog_add_src"]).size:
+            ing.buffer.push_edges(np.asarray(w["backlog_add_src"]),
+                                  np.asarray(w["backlog_add_dst"]),
+                                  np.asarray(w["backlog_add_t"]))
+        if np.asarray(w["backlog_dels"]).size:
+            ing.buffer.push_node_removals(np.asarray(w["backlog_dels"]))
+        system._place_key = jnp.asarray(payload["place_key"])
+        prog = np.asarray(payload["program_state"])
+        if system.program is not None and prog.size:
+            system.program_state = jnp.asarray(prog)
+        system._superstep = int(extra["superstep"])
+        system._now = int(extra["now"])
+        system._run_seconds = float(extra["run_seconds"])
+        system.telemetry = [SuperstepRecord(**r) for r in extra["telemetry"]]
+        return system
+
     # -- measurement --------------------------------------------------------
     def snapshot(self, *, bsr_blk: Optional[int] = None) -> Dict:
         """Partition-quality + BSR-tiling view of the session right now."""
         blk = bsr_blk if bsr_blk is not None else self.config.telemetry.bsr_blk
         return {
             "strategy": self.strategy.name,
+            "backend": self.backend.name,
+            "cluster": self.backend.device_stats(),
             "k": self.config.partition.k,
             "supersteps": self._superstep,
             "now": self._now,
@@ -469,8 +748,11 @@ class DynamicGraphSystem:
         blk = bsr_blk if bsr_blk is not None else self.config.telemetry.bsr_blk
         return {
             "mode": self.strategy.name,
+            "backend": self.backend.name,
             "supersteps": len(recs),
             "events": int(sum(r.events for r in recs)),
+            "halo_bytes": int(sum(r.halo_bytes for r in recs)),
+            "collective_bytes": int(sum(r.collective_bytes for r in recs)),
             "cut_final": float(recs[-1].cut_ratio),
             "cut_mean": float(np.mean([r.cut_ratio for r in recs])),
             "imbalance_final": float(recs[-1].imbalance),

@@ -37,6 +37,10 @@ class SuperstepRecord:
     local_bytes: int = 0       # program message traffic staying intra-partition
     remote_bytes: int = 0      # program message traffic crossing partitions
     compute_seconds: float = 0.0  # vertex-program superstep wall clock
+    halo_bytes: int = 0        # sharded backend: halo bytes received this
+                               # superstep, summed over devices (0 on local)
+    collective_bytes: int = 0  # sharded backend: capacity-psum + rank-gather
+                               # bytes, summed over devices (0 on local)
 
     @property
     def events_per_second(self) -> float:

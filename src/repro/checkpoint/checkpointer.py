@@ -32,17 +32,23 @@ class Checkpointer:
         self._pending: Optional[Future] = None
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, state: Any) -> None:
+    def save(self, step: int, state: Any,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        """Write one checkpoint. ``extra`` is an optional JSON-compatible
+        sidecar (session config, counters, telemetry) stored inside the
+        step directory before the atomic rename, so a step is either fully
+        present — arrays *and* sidecar — or absent."""
         leaves, treedef = jax.tree.flatten(state)
         host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
         if self._pool is not None:
             self.wait()
             self._pending = self._pool.submit(self._write, step, host_leaves,
-                                              str(treedef))
+                                              str(treedef), extra)
         else:
-            self._write(step, host_leaves, str(treedef))
+            self._write(step, host_leaves, str(treedef), extra)
 
-    def _write(self, step: int, leaves: List[np.ndarray], treedef: str) -> None:
+    def _write(self, step: int, leaves: List[np.ndarray], treedef: str,
+               extra: Optional[Dict[str, Any]] = None) -> None:
         final = os.path.join(self.directory, f"step_{step:08d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -60,6 +66,9 @@ class Checkpointer:
                     allow_pickle=False)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        if extra is not None:
+            with open(os.path.join(tmp, "extra.json"), "w") as f:
+                json.dump(extra, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)       # atomic commit
@@ -90,6 +99,18 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_extra(self, step: Optional[int] = None) -> Optional[Dict[str, Any]]:
+        """The JSON sidecar saved alongside a step (None if absent)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}", "extra.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
     def restore(self, like: Any, step: Optional[int] = None) -> Tuple[Any, int]:
         """Restore into the structure of ``like`` (shape/dtype template)."""
         if step is None:
@@ -112,5 +133,12 @@ class Checkpointer:
                 # ml_dtypes names (e.g. bfloat16) resolve via jnp
                 import jax.numpy as jnp
                 arr = np.asarray(jnp.asarray(arr).astype(target_dtype))
-            new_leaves.append(jax.device_put(arr))
+            dev = jax.device_put(arr)
+            if dev.dtype != arr.dtype:
+                # jax canonicalises 64-bit leaves to 32-bit when x64 is off,
+                # which would wrap sentinels (e.g. int64 min) and epoch-ms
+                # timestamps — keep such leaves as host numpy, lossless
+                new_leaves.append(arr)
+            else:
+                new_leaves.append(dev)
         return jax.tree.unflatten(treedef, new_leaves), step

@@ -14,7 +14,20 @@ Paper ↔ SPMD mapping (see DESIGN.md §2):
                           is the block-permuted relocation (all_to_all)
 
 The engine keeps every shape static: edges are bucketed per destination
-device and padded to the max bucket; the halo is padded to the max boundary.
+device and padded to the max bucket; the halo is padded to the max boundary
+(optionally with head-room, see ``halo_pad``).
+
+Two migration engines share the bucketing/halo machinery:
+
+* ``make_distributed_migrator`` — the pure O(k)-message engine: per-block
+  quota ranking, per-device RNG streams. Decentralised exactly like the
+  paper, but its trajectories differ from the single-host heuristic.
+* ``make_cluster_migrator`` — the *parity* engine behind the ``"sharded"``
+  ``ExecutionBackend`` (DESIGN.md §10): a bit-exact SPMD mirror of
+  ``core.migration.migrate_step``. RNG draws are made in the session's
+  original slot order, quota ranking is a global order recovered from one
+  all_gather of packed rank keys, and the capacity vector is psum'd —
+  so a cluster session produces bit-identical assignments to a local one.
 """
 from __future__ import annotations
 
@@ -68,6 +81,25 @@ class DistGraph:
         return self.boundary.shape[1]
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Host-side mapping between session slot space and device-block space.
+
+    The cluster engine stores vertices in partition-per-device blocks while
+    the session keeps its canonical arrays in the original slot order; this
+    is the dictionary between the two (the cluster migrator turns it into
+    device-side gathers, so per-iteration conversion never touches the
+    host).
+    """
+
+    perm: np.ndarray        # (n_cap,) new-slot-order -> old id (lexsort order)
+    new_global: np.ndarray  # (n_cap,) old id -> block-space slot (-1 = dead)
+    orig_id: np.ndarray     # (P*n_blk,) block-space slot -> old id (-1 = pad)
+    n_cap: int
+    n_blk: int
+    num_devices: int
+
+
 def build_dist_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
                      block_size: Optional[int] = None,
                      ) -> Tuple[DistGraph, np.ndarray]:
@@ -75,8 +107,27 @@ def build_dist_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
 
     Nodes are permuted so partition p occupies block p (the "vertex
     migration" materialised). Returns (DistGraph, perm) where perm maps
-    new global slot -> old node id.
+    new global slot -> old node id. (Compat surface over
+    ``build_cluster_graph``, which additionally returns the full layout.)
     """
+    dg, layout = build_cluster_graph(graph, assignment, num_devices,
+                                     block_size=block_size)
+    return dg, layout.perm
+
+
+def build_cluster_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
+                        *, block_size: Optional[int] = None,
+                        halo_pad: float = 0.0,
+                        ) -> Tuple[DistGraph, "BlockLayout"]:
+    """Bucketing + halo build behind the backend interface.
+
+    ``halo_pad`` is the halo padding policy: fractional head-room added on
+    top of the largest boundary segment, so that all devices exchange the
+    same (padded) halo volume and a later engine could grow boundaries
+    without an immediate rebuild.
+    """
+    if halo_pad < 0:
+        raise ValueError(f"halo_pad must be >= 0, got {halo_pad}")
     P = num_devices
     assignment = np.asarray(assignment)
     node_mask = np.asarray(graph.node_mask)
@@ -120,7 +171,8 @@ def build_dist_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
     # --- boundary sets: local slots referenced by remote edges ------------
     boundary_sets = [np.unique(src_off[(src_dev == p) & (dst_dev != p)])
                      for p in range(P)]
-    B = int(max(1, max((b.size for b in boundary_sets), default=1)))
+    b_max = int(max((b.size for b in boundary_sets), default=1))
+    B = max(1, int(np.ceil(b_max * (1.0 + halo_pad))))
     boundary = np.zeros((P, B), dtype=np.int32)
     boundary_ok = np.zeros((P, B), dtype=bool)
     halo_slot = {}                                  # (dev, off) -> halo idx
@@ -162,7 +214,11 @@ def build_dist_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
         src_local=jnp.asarray(src_local), dst_local=jnp.asarray(dst_local),
         edge_ok=jnp.asarray(edge_ok), boundary=jnp.asarray(boundary),
         boundary_ok=jnp.asarray(boundary_ok), node_ok=jnp.asarray(node_ok))
-    return dg, perm
+    orig_id = np.full((P * n_blk,), -1, np.int64)
+    orig_id[new_global[live_ids]] = live_ids
+    layout = BlockLayout(perm=perm, new_global=new_global, orig_id=orig_id,
+                         n_cap=n_cap, n_blk=n_blk, num_devices=P)
+    return dg, layout
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +228,8 @@ def build_dist_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
 AXIS = "nodes"
 
 
-def _halo_exchange(local_feat: jax.Array, dg_local: DistGraph) -> jax.Array:
+def _halo_exchange(local_feat: jax.Array, dg_local: DistGraph,
+                   axis: str = AXIS) -> jax.Array:
     """all_gather of every device's boundary segment → (P*B, d) halo buffer.
 
     Collective volume per device = P·B·d — proportional to the cut, which is
@@ -180,7 +237,7 @@ def _halo_exchange(local_feat: jax.Array, dg_local: DistGraph) -> jax.Array:
     """
     bnd = local_feat[dg_local.boundary[0]]              # (B, d)
     bnd = jnp.where(dg_local.boundary_ok[0][:, None], bnd, 0)
-    halo = jax.lax.all_gather(bnd, AXIS, tiled=True)     # (P*B, d)
+    halo = jax.lax.all_gather(bnd, axis, tiled=True)     # (P*B, d)
     return halo
 
 
@@ -317,3 +374,206 @@ def make_distributed_migrator(mesh: jax.sharding.Mesh, dg: DistGraph, k: int,
         return f(assignment, pending, rng, dg, capacity)
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Parity engine: bit-exact SPMD mirror of core.migration.migrate_step
+# (the execution layer behind repro.api's "sharded" backend, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def cluster_migrate_shard(assignment_blk: jax.Array, pending_blk: jax.Array,
+                          noise_blk: jax.Array, gate_blk: jax.Array,
+                          orig_blk: jax.Array, dg_local: DistGraph,
+                          capacity: jax.Array, *, k: int, halo_size: int,
+                          n_cap: int, tie_break: str, axis: str = AXIS,
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array, jax.Array]:
+    """One adaptive iteration per device block — decision-identical to the
+    single-host ``migrate_step`` (commit → score → decide → damp → quota →
+    defer), with the distribution showing only in *where* terms come from:
+
+      neighbour labels      → boundary-segment halo exchange (all_gather)
+      occupancy/capacity    → psum of a k-vector (the paper's O(k) message)
+      quota ranking         → the single-host rank orders movers of a
+                              (src, dst) pair by original slot id; that order
+                              is recovered exactly from one all_gather of
+                              packed ``group · n_cap + orig_id`` keys
+
+    ``noise_blk``/``gate_blk`` are the *same* RNG draws the local step makes
+    (drawn over the original slot space and scattered into blocks by the
+    caller), so damping and tie-breaking match draw for draw.
+    """
+    node_ok = dg_local.node_ok[0]
+    # ---- 1. COMMIT deferred migrations from t-1 -------------------------
+    has_pending = pending_blk >= 0
+    assignment_blk = jnp.where(has_pending, pending_blk, assignment_blk)
+    committed = jax.lax.psum(
+        jnp.sum(has_pending & node_ok).astype(jnp.int32), axis)
+
+    # ---- 2. SCORE: neighbour-label histogram via the label halo ----------
+    lab_feat = assignment_blk[:, None].astype(jnp.float32)
+    halo = _halo_exchange(lab_feat, dg_local, axis)[:, 0].astype(jnp.int32)
+    src_owner = dg_local.src_owner[0]
+    src_slot = dg_local.src_slot[0]
+    src_is_local = dg_local.src_local[0]
+    dst_local = dg_local.dst_local[0]
+    edge_ok = dg_local.edge_ok[0]
+    lab_remote = halo[jnp.clip(src_owner * halo_size + src_slot,
+                               0, halo.shape[0] - 1)]
+    lab_src = jnp.where(src_is_local, assignment_blk[src_slot], lab_remote)
+    n_blk = assignment_blk.shape[0]
+    seg = jnp.where(edge_ok, dst_local, n_blk)
+    onehot = jax.nn.one_hot(lab_src, k, dtype=jnp.int32) * edge_ok[:, None]
+    counts = jax.ops.segment_sum(onehot, seg, num_segments=n_blk + 1)[:n_blk]
+
+    # ---- 3. DECIDE (same rule, expressions and dtypes as greedy_targets) --
+    best_count = jnp.max(counts, axis=1)
+    cur = jnp.clip(assignment_blk, 0, k - 1)
+    isolated = (best_count == 0) | ~node_ok
+    if tie_break == "stay":
+        cur_count = jnp.take_along_axis(counts, cur[:, None], axis=1)[:, 0]
+        stay = (cur_count >= best_count) | isolated
+        target = jnp.where(stay, cur,
+                           jnp.argmax(counts, axis=1).astype(jnp.int32))
+    else:                                   # "random" (validated by caller)
+        score = counts.astype(jnp.float32) + noise_blk
+        target = jnp.argmax(score, axis=1).astype(jnp.int32)
+        target = jnp.where(isolated, cur, target)
+    wants_move = (target != assignment_blk) & node_ok
+
+    # ---- 4. DAMP (the session's own Bernoulli(s) draw, pre-scattered) ----
+    willing = wants_move & gate_blk
+    n_willing = jax.lax.psum(jnp.sum(willing).astype(jnp.int32), axis)
+
+    # ---- 5. QUOTA: psum'd occupancy + globally-ordered ranking -----------
+    occ_local = jax.ops.segment_sum(
+        node_ok.astype(jnp.int32),
+        jnp.where(node_ok, assignment_blk, k), num_segments=k + 1)[:k]
+    occ = jax.lax.psum(occ_local, axis)
+    free = jnp.maximum(capacity - occ, 0)
+    quota = free // jnp.maximum(k - 1, 1)
+    src_part = jnp.clip(assignment_blk, 0, k - 1)
+    tgt_safe = jnp.clip(target, 0, k - 1)
+    group = src_part * k + tgt_safe
+    big = jnp.iinfo(jnp.int32).max
+    key = jnp.where(willing, group * n_cap + orig_blk, big)
+    all_keys = jnp.sort(jax.lax.all_gather(key, axis, tiled=True))
+    # rank within (i, j) group in original slot order: position of my key
+    # among all active keys minus the position where my group begins
+    rank = (jnp.searchsorted(all_keys, key)
+            - jnp.searchsorted(all_keys, group * n_cap)).astype(jnp.int32)
+    admitted = willing & (rank < quota[tgt_safe])
+    n_admitted = jax.lax.psum(jnp.sum(admitted).astype(jnp.int32), axis)
+
+    # ---- 6. DEFER ---------------------------------------------------------
+    pending = jnp.where(admitted, target, jnp.int32(-1))
+    return assignment_blk, pending, committed, n_willing, n_admitted
+
+
+def make_cluster_migrator(mesh: jax.sharding.Mesh, dg: DistGraph,
+                          layout: BlockLayout, k: int, *, s: float = 0.5,
+                          tie_break: str = "random", axis: str = AXIS):
+    """jit'd parity migration step over the mesh (k == P required).
+
+    Returns ``step(assignment, pending, rng, capacity) -> (assignment,
+    pending, rng, (committed, willing, admitted))`` operating on the
+    session's canonical (n_cap,) slot-space arrays: the slot↔block
+    permutation happens as device-side gathers inside the one jit program,
+    so an iteration costs no host round-trip. Stats are the same integers
+    the local ``migrate_step`` reports, and successive calls thread the
+    session RNG exactly like the local step does (one 3-way split per
+    iteration).
+    """
+    P = dg.num_devices
+    if k != P:
+        raise ValueError(f"cluster engine is partition-per-device: k must "
+                         f"equal the device count ({k} != {P})")
+    if tie_break not in ("random", "stay"):
+        raise ValueError(f"unknown tie_break {tie_break!r}")
+    n_cap = layout.n_cap
+    if (k * k) * n_cap + n_cap >= 2 ** 31:
+        raise ValueError(f"rank keys overflow int32: k={k}, n_cap={n_cap}")
+    halo = dg.halo_size
+    blk_live = jnp.asarray(layout.orig_id >= 0)
+    orig = jnp.asarray(np.maximum(layout.orig_id, 0), jnp.int32)
+    orig_safe = jnp.clip(orig, 0, n_cap - 1)
+    slot_live = jnp.asarray(layout.new_global >= 0)
+    ng_safe = jnp.asarray(
+        np.clip(layout.new_global, 0, layout.orig_id.shape[0] - 1), jnp.int32)
+    spec_n = jax.sharding.PartitionSpec(axis)
+    spec_r = jax.sharding.PartitionSpec()
+    dg_specs = DistGraph(*([spec_n] * 8))
+
+    @jax.jit
+    def step(assignment: jax.Array, pending: jax.Array, rng: jax.Array,
+             capacity: jax.Array):
+        # scatter slot-space state into blocks (pad slots: stay, no pending)
+        assignment_blk = jnp.where(blk_live, assignment[orig_safe], 0)
+        pending_blk = jnp.where(blk_live, pending[orig_safe], -1)
+        # identical split order and draw shapes to migrate_step: the draws
+        # live in ORIGINAL slot space and are scattered into blocks
+        rng_next, tie_key, sub = jax.random.split(rng, 3)
+        if tie_break == "random":
+            noise_blk = jax.random.uniform(tie_key, (n_cap, k))[orig_safe]
+        else:
+            noise_blk = jnp.zeros((orig.shape[0], k), jnp.float32)
+        gate_blk = jax.random.bernoulli(sub, p=s, shape=(n_cap,))[orig_safe]
+        f = shard_map(
+            partial(cluster_migrate_shard, k=k, halo_size=halo, n_cap=n_cap,
+                    tie_break=tie_break, axis=axis),
+            mesh=mesh,
+            in_specs=(spec_n, spec_n, spec_n, spec_n, spec_n, dg_specs,
+                      spec_r),
+            out_specs=(spec_n, spec_n, spec_r, spec_r, spec_r),
+        )
+        a_blk, p_blk, committed, willing, admitted = f(
+            assignment_blk, pending_blk, noise_blk, gate_blk, orig, dg,
+            capacity)
+        # gather back to slot space; dead slots keep their labels (they
+        # never migrate locally either) and carry no pending
+        a = jnp.where(slot_live, a_blk[ng_safe], assignment)
+        p = jnp.where(slot_live, p_blk[ng_safe], -1)
+        return a, p, rng_next, (committed, willing, admitted)
+
+    replicated = jax.sharding.NamedSharding(mesh,
+                                            jax.sharding.PartitionSpec())
+
+    def step_on_mesh(assignment: jax.Array, pending: jax.Array,
+                     rng: jax.Array, capacity: jax.Array):
+        # state arrays may still be committed to a previous mesh (local
+        # execution, or a pre-rescale device count) — a no-op when already
+        # placed here, a copy exactly once after a backend/mesh change
+        args = jax.device_put((assignment, pending, rng, capacity),
+                              replicated)
+        return step(*args)
+
+    return step_on_mesh
+
+
+def comm_model(dg: DistGraph, k: int, label_bytes: int = 4) -> dict:
+    """Per-iteration communication bill of the cluster engine, per device.
+
+    Derived host-side from the (static) bucketing shapes — the wire volume
+    of a shard_map iteration is fully determined by them:
+
+      halo          — each device receives every boundary segment: P·B·b
+                      bytes (padded); the *live* fraction is the cut
+                      frontier, which is what the heuristic shrinks.
+      capacity psum — the paper's O(k) worker message: k·b bytes.
+      rank gather   — the quota-parity all_gather: P·n_blk·b bytes (the
+                      price of bit-exact global ranking; the pure O(k)
+                      engine in ``make_distributed_migrator`` skips it).
+    """
+    P, B, n_blk = dg.num_devices, dg.halo_size, dg.block_size
+    live_boundary = np.asarray(dg.boundary_ok).sum(axis=1).astype(int)
+    return {
+        "devices": P,
+        "halo_slots": B,
+        "halo_bytes_per_device": P * B * label_bytes,
+        "halo_live_bytes_per_device": int(live_boundary.sum()) * label_bytes,
+        "boundary_live_per_device": live_boundary.tolist(),
+        "collective_bytes_per_device": (k + P * n_blk) * label_bytes,
+        "rank_gather_bytes_per_device": P * n_blk * label_bytes,
+        "capacity_psum_bytes_per_device": k * label_bytes,
+    }

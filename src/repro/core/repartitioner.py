@@ -69,6 +69,7 @@ def run_to_convergence(graph: Graph, state: PartitionState, *, s: float = 0.5,
                        chunked_counts: bool = False,
                        record_history: bool = True,
                        backend: str = "ref", plan=None,
+                       step_fn=None,
                        ) -> Tuple[PartitionState, History]:
     """Iterate until converged.
 
@@ -80,16 +81,21 @@ def run_to_convergence(graph: Graph, state: PartitionState, *, s: float = 0.5,
 
     ``backend``/``plan`` select the scoring implementation per iteration
     (see ``migrate_step``); the graph is fixed for the whole loop, so one
-    pre-packed ``plan`` amortises over every iteration.
+    pre-packed ``plan`` amortises over every iteration. ``step_fn``
+    overrides the whole iteration — ``state -> (state, MigrationStats)`` —
+    which is how the sharded execution backend reuses this control flow
+    (same stopping rule, same history) over the cluster engine.
     """
+    if step_fn is None:
+        step_fn = lambda st: migrate_step(st, graph, plan, s=s,
+                                          use_chunked_counts=chunked_counts,
+                                          tie_break=tie_break, backend=backend)
     hist = History.empty()
     quiet = 0
     best_cut = float("inf")
     stale = 0
     for _ in range(max_iters):
-        state, stats = migrate_step(state, graph, plan, s=s,
-                                    use_chunked_counts=chunked_counts,
-                                    tie_break=tie_break, backend=backend)
+        state, stats = step_fn(state)
         moved = int(stats.committed)
         pending = int(stats.admitted)
         cut = float(cut_ratio(graph, state.assignment))
@@ -117,17 +123,21 @@ def adapt_rounds(graph: Graph, state: PartitionState, iters: int, *,
                  chunked_counts: bool = False,
                  record_history: bool = True,
                  backend: str = "ref", plan=None,
+                 step_fn=None,
                  ) -> Tuple[PartitionState, History]:
     """Run a fixed number of adaptation iterations (continuous mode).
 
     Pending moves stay deferred at return (paper §4.2) — the next call's
     first iteration commits them, exactly like the interleaved stream mode.
+    ``step_fn`` overrides the iteration like in ``run_to_convergence``.
     """
+    if step_fn is None:
+        step_fn = lambda st: migrate_step(st, graph, plan, s=s,
+                                          use_chunked_counts=chunked_counts,
+                                          tie_break=tie_break, backend=backend)
     hist = History.empty()
     for _ in range(iters):
-        state, stats = migrate_step(state, graph, plan, s=s,
-                                    use_chunked_counts=chunked_counts,
-                                    tie_break=tie_break, backend=backend)
+        state, stats = step_fn(state)
         if record_history:
             hist.cut_ratio.append(float(cut_ratio(graph, state.assignment)))
             hist.migrations.append(int(stats.committed))

@@ -5,8 +5,15 @@ The paper recovers failures by snapshot-restore (§4.3, Fig. 8 "sudden drop
 worker the partition count shrinks k → k', orphaned vertices are re-homed by
 hash, and the SAME adaptive migration heuristic re-converges the placement —
 partitioning quality recovers automatically instead of staying degraded.
-On scale-UP, new empty partitions are seeded and the heuristic (driven by
-its balance quotas + greedy locality) fills them.
+On scale-UP, existing labels are kept; new partitions start empty and fill
+only as the heuristic's quotas route movers there.
+
+This module is the mechanism layer. The session-level operation is
+``repro.api.DynamicGraphSystem.rescale`` (DESIGN.md §10), which re-homes
+through :func:`rescale_assignment`, re-provisions capacity/telemetry for
+the new k and re-adapts on the session's own execution backend;
+``elastic_rescale`` below remains the standalone (graph, assignment)
+entry point for benchmarks and ad-hoc use.
 """
 from __future__ import annotations
 

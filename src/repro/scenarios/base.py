@@ -20,9 +20,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.api import (ComputeSection, GraphSection, PartitionSection,
-                       StreamSection, SystemConfig, TelemetrySection,
-                       empty_graph)
+from repro.api import (ClusterSection, ComputeSection, GraphSection,
+                       PartitionSection, StreamSection, SystemConfig,
+                       TelemetrySection, empty_graph)
 from repro.graph.structure import Graph
 from repro.stream.engine import StreamConfig
 
@@ -65,7 +65,8 @@ class Scenario:
     def system_config(self, *, strategy: str = "xdgp",
                       seed: Optional[int] = None,
                       recompute_every: int = 8,
-                      backend: str = "auto") -> SystemConfig:
+                      backend: str = "auto",
+                      cluster: str = "local") -> SystemConfig:
         """The session config for this scenario.
 
         ``strategy="xdgp"`` is the system under test (online placement of
@@ -73,7 +74,8 @@ class Scenario:
         ``"static"`` yields the paper's static-hash baseline — no other
         change anywhere. ``backend`` selects the migration-scoring
         implementation (``"ref"``/``"pallas"``/``"auto"``, DESIGN.md §9);
-        both produce bit-identical runs.
+        ``cluster`` selects the execution backend (``"local"``/``"sharded"``,
+        DESIGN.md §10) — all combinations produce bit-identical runs.
         """
         return SystemConfig(
             graph=GraphSection(n_cap=self.graph.n_cap, e_cap=self.graph.e_cap),
@@ -86,6 +88,7 @@ class Scenario:
             compute=ComputeSection(program=self.program,
                                    payload_scale=self.payload_scale,
                                    backend=backend),
+            cluster=ClusterSection(backend=cluster),
             telemetry=TelemetrySection(recompute_every=recompute_every),
             seed=self.seed if seed is None else seed)
 

@@ -29,33 +29,38 @@ __all__ = ["CostModel", "bsr_snapshot", "compare_scenario",
 
 
 def _system(scn: Scenario, *, strategy: str, seed: Optional[int] = None,
-            backend: str = "auto") -> DynamicGraphSystem:
+            backend: str = "auto", cluster: str = "local",
+            ) -> DynamicGraphSystem:
     return DynamicGraphSystem(scn.graph,
                               scn.system_config(strategy=strategy, seed=seed,
-                                                backend=backend))
+                                                backend=backend,
+                                                cluster=cluster))
 
 
 def run_scenario(scn: Scenario, *, adaptive: bool,
                  max_supersteps: Optional[int] = None, bsr_blk: int = 32,
                  cost: Optional[CostModel] = None, seed: Optional[int] = None,
-                 backend: str = "auto") -> Dict:
+                 backend: str = "auto", cluster: str = "local") -> Dict:
     """Drive the scenario through the system; return the measured run row."""
     system = _system(scn, strategy="xdgp" if adaptive else "static",
-                     seed=seed, backend=backend)
+                     seed=seed, backend=backend, cluster=cluster)
     system.run(scn, max_supersteps=max_supersteps)
     return system.score(cost=cost, bsr_blk=bsr_blk)
 
 
 def compare_scenario(scn: Scenario, *, max_supersteps: Optional[int] = None,
                      bsr_blk: int = 32, cost: Optional[CostModel] = None,
-                     seed: Optional[int] = None, backend: str = "auto") -> Dict:
+                     seed: Optional[int] = None, backend: str = "auto",
+                     cluster: str = "local") -> Dict:
     """Adaptive vs. static-hash on the identical stream (paper's comparison).
 
     ``seed`` varies the system's own randomness (placement tie noise,
     migration damping) independently of the stream, which stays pinned to
     the scenario's seed. ``backend`` selects the migration-scoring path
-    (DESIGN.md §9) — bit-identical results either way."""
-    system = _system(scn, strategy="xdgp", seed=seed, backend=backend)
+    (DESIGN.md §9), ``cluster`` the execution backend (DESIGN.md §10) —
+    bit-identical results whichever way."""
+    system = _system(scn, strategy="xdgp", seed=seed, backend=backend,
+                     cluster=cluster)
     return system.compare(scn, baseline="static",
                           max_supersteps=max_supersteps, bsr_blk=bsr_blk,
                           cost=cost)

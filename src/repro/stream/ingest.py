@@ -119,6 +119,15 @@ class EdgeStreamBuffer:
         if len(self._del_chunks) > 1:
             self._del_chunks = [np.concatenate(self._del_chunks)]
 
+    def peek_all(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """The entire queued backlog — (add_src, add_dst, add_t, del_nodes) —
+        without dequeueing anything (checkpointing reads this)."""
+        self._consolidate()
+        src, dst, t = (self._add_chunks[0] if self._add_chunks else
+                       (np.empty((0,), np.int64),) * 3)
+        dels = self._del_chunks[0] if self._del_chunks else np.empty((0,), np.int64)
+        return src, dst, t, dels
+
     def pop(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Dequeue up to capacity changes (FIFO): (add_src, add_dst, add_t,
         del_nodes) as host arrays; leftovers stay queued."""

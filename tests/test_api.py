@@ -22,13 +22,17 @@ from repro.graph import cut_ratio, generators
 PUBLIC_API = [
     # config
     "SystemConfig", "GraphSection", "StreamSection", "PartitionSection",
-    "ComputeSection", "TelemetrySection",
+    "ComputeSection", "ClusterSection", "TelemetrySection",
     # strategy protocol + registry
     "PartitionStrategy", "StrategyContext",
     "register_strategy", "resolve_strategy", "strategy_names",
     # shipped strategies
     "Static", "Hash", "Random", "Modulo", "Block", "Dgr", "Mnn",
     "OnlineFennel", "XdgpAdaptive",
+    # execution backends
+    "ExecutionBackend", "LocalBackend", "ShardedBackend",
+    "register_execution_backend", "resolve_execution_backend",
+    "execution_backend_names",
     # session + measurement
     "DynamicGraphSystem", "SuperstepRecord", "History", "CostModel",
     "empty_graph", "bsr_snapshot", "partition_relabelled",

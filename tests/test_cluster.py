@@ -1,0 +1,428 @@
+"""Cluster-session tests: the ExecutionBackend layer (DESIGN.md §10).
+
+Three groups:
+  * in-process — config/registry surface, rescale, save/restore (1 device
+    is enough: they exercise the lifecycle, not the sharded engine);
+  * subprocess under 8 fake devices — the local-vs-sharded parity property
+    (assignments bit-identical, capacity invariant, distribute()/gather()
+    round-trips) on random dynamic graphs;
+  * in-process sharded — skipped unless the host already exposes ≥8
+    devices (the tier-1-sharded CI job runs with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import (ClusterSection, DynamicGraphSystem, LocalBackend,
+                       PartitionSection, ShardedBackend, StreamSection,
+                       SystemConfig, empty_graph, execution_backend_names,
+                       resolve_execution_backend)
+from repro.graph import generators
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(snippet: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Surface: registry, config section, protocol
+# ---------------------------------------------------------------------------
+
+def test_backend_registry():
+    assert execution_backend_names() == ("local", "sharded")
+    assert resolve_execution_backend("local").name == "local"
+    b = resolve_execution_backend(
+        "sharded", cluster=ClusterSection(backend="sharded", devices=4))
+    assert isinstance(b, ShardedBackend) and b.cluster.devices == 4
+    inst = LocalBackend()
+    assert resolve_execution_backend(inst) is inst
+    with pytest.raises(ValueError, match="execution backends"):
+        resolve_execution_backend("shardedd")
+
+
+def test_cluster_section_round_trips():
+    cfg = SystemConfig(cluster=ClusterSection(backend="sharded", axis="vtx",
+                                              devices=8, halo_pad=0.25))
+    assert SystemConfig.from_dict(cfg.to_dict()) == cfg
+    assert cfg.with_cluster(backend="local").cluster.backend == "local"
+    assert cfg.with_cluster(backend="local").cluster.devices == 8
+    with pytest.raises(ValueError, match="unknown keys.*cluster"):
+        SystemConfig.from_dict({"cluster": {"backed": "sharded"}})
+
+
+def test_cluster_section_validates_knobs():
+    with pytest.raises(ValueError, match="halo_pad"):
+        ClusterSection(halo_pad=-0.5)
+    with pytest.raises(ValueError, match="devices"):
+        ClusterSection(devices=-1)
+
+
+def test_session_default_backend_is_local():
+    g = generators.fem_grid2d(6)
+    system = DynamicGraphSystem(g, SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=4)))
+    assert system.backend.name == "local"
+    snap = system.snapshot()
+    assert snap["backend"] == "local" and snap["cluster"] is None
+    # local records carry zeroed comm counters (same telemetry keys)
+    system.adapt(3)
+    assert system.backend.pop_superstep_comm() == {"halo_bytes": 0,
+                                                   "collective_bytes": 0}
+
+
+def test_distribute_rejects_missing_devices_atomically():
+    g = generators.fem_grid2d(6)
+    k_too_many = len(jax.devices()) + 1
+    system = DynamicGraphSystem(g, SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=k_too_many)))
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        system.distribute()
+    # the failed move left the session untouched and fully usable
+    assert system.backend.name == "local"
+    assert system.config.cluster.backend == "local"
+    system.adapt(2)
+
+
+def test_sharded_requires_partition_per_device():
+    with pytest.raises(ValueError, match="partition-per-device"):
+        ShardedBackend(ClusterSection(backend="sharded",
+                                      devices=4)).required_devices(k=8)
+
+
+# ---------------------------------------------------------------------------
+# Elastic rescale as a session operation
+# ---------------------------------------------------------------------------
+
+def test_rescale_down_rehomes_and_readapts():
+    g = generators.fem_cube(10)
+    system = DynamicGraphSystem(g, SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=8, slack=0.15)))
+    system.adapt(50)
+    report = system.rescale(6, lost=(2, 5), adapt_iters=40)
+    assert report["old_k"] == 8 and report["new_k"] == 6
+    assert report["cut_after_adapt"] < report["cut_after_rehash"]
+    assert report["migrations"] > 0
+    assert system.config.partition.k == 6
+    lab = np.asarray(system.labels)[np.asarray(system.graph.node_mask)]
+    assert lab.min() >= 0 and lab.max() < 6
+    occ = np.asarray(system.tracker.occupancy)
+    assert (occ <= np.asarray(system.state.capacity)).all()
+    snap = system.snapshot()
+    assert snap["k"] == 6 and len(snap["occupancy"]) == 6
+
+
+def test_rescale_up_keeps_labels_and_reprovisions():
+    """Scale-up keeps existing labels (new partitions start empty, filled
+    only as the heuristic's quotas route movers there); the session
+    re-provisions capacity and telemetry for the new k."""
+    g = generators.fem_cube(10)
+    system = DynamicGraphSystem(g, SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=4)))
+    system.adapt(40)
+    cut_before = system.cut_ratio
+    report = system.rescale(6, adapt_iters=60)
+    assert report["new_k"] == 6 and system.config.partition.k == 6
+    occ = np.asarray(system.tracker.occupancy)
+    assert occ.shape == (6,) and occ.sum() == int(g.num_nodes)
+    assert system.cut_ratio <= cut_before + 1e-6   # adaptation never regresses
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / restore as session operations
+# ---------------------------------------------------------------------------
+
+def _stream_cfg(n, window):
+    return SystemConfig(
+        stream=StreamSection(window=window, batch_span=window // 2),
+        partition=PartitionSection(strategy="xdgp", k=4, adapt_iters=3),
+    )
+
+
+def test_save_restore_resumes_bit_identical(tmp_path):
+    """A mid-run snapshot + restore continues exactly the uninterrupted
+    trajectory: partition state, RNG, window liveness and backlog all
+    survive the round trip."""
+    from repro.stream.ingest import stream_batches
+
+    n, window = 250, 120
+    times, u, v = generators.sliding_window_stream(n, 3000, window, seed=3)
+    cfg = _stream_cfg(n, window)
+
+    ref = DynamicGraphSystem(empty_graph(n, 5000), cfg)
+    ref.run((times, u, v))
+
+    system = DynamicGraphSystem(empty_graph(n, 5000), cfg)
+    batches = list(stream_batches(times, u, v, window // 2))
+    half = len(batches) // 2
+    for now, ev in batches[:half]:
+        system.step(ev, now)
+    step = system.save(str(tmp_path / "ckpt"))
+    resumed = DynamicGraphSystem.restore(str(tmp_path / "ckpt"), step=step)
+    assert resumed.config == cfg
+    for now, ev in batches[half:]:
+        resumed.step(ev, now)
+
+    assert np.array_equal(np.asarray(ref.labels), np.asarray(resumed.labels))
+    assert ([r.cut_ratio for r in ref.telemetry]
+            == [r.cut_ratio for r in resumed.telemetry])
+    assert ([r.migrations for r in ref.telemetry]
+            == [r.migrations for r in resumed.telemetry])
+    # the restored tracker is still exact (drift check passes in score path)
+    assert all(r.drift == 0.0 for r in resumed.telemetry
+               if r.drift is not None)
+
+
+def test_save_restore_preserves_int64_window_state(tmp_path):
+    """Epoch-millisecond timestamps and the int64 NEVER sentinel must
+    survive the round trip — jax canonicalises int64 to int32 when x64 is
+    off, which would wrap both (regression: checkpointer keeps 64-bit
+    leaves on host)."""
+    from repro.stream.ingest import WindowTracker
+
+    n, window = 100, 60_000
+    t0 = 1_700_000_000_000                       # epoch ms
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=10_000),
+        partition=PartitionSection(strategy="xdgp", k=4, adapt_iters=2))
+    system = DynamicGraphSystem(empty_graph(n, 2000), cfg)
+    ev = np.array([[t0, 1, 2], [t0 + 5, 3, 4]], np.int64)
+    system.step(ev, t0 + 5)
+    before = system.ingestor.tracker.last_seen.copy()
+    tracked_before = system.ingestor.tracker.tracked
+    system.save(str(tmp_path / "ckpt"))
+    resumed = DynamicGraphSystem.restore(str(tmp_path / "ckpt"))
+    after = resumed.ingestor.tracker.last_seen
+    assert after.dtype == np.int64
+    assert np.array_equal(before, after)
+    assert resumed.ingestor.tracker.tracked == tracked_before
+    assert (after[after != WindowTracker.NEVER] >= t0).all()
+    # and the next superstep does not hallucinate expiries
+    rec = resumed.step(np.array([[t0 + 10, 5, 6]], np.int64), t0 + 10)
+    assert rec.dels == 0 and rec.invalid_events == 0
+
+
+def test_restore_refuses_dropped_constructor_overrides(tmp_path):
+    """A checkpoint records override names only; restoring without handing
+    the same overrides back must fail loudly, not silently diverge."""
+    from repro.api import XdgpAdaptive
+
+    g = generators.fem_grid2d(6)
+    cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=4))
+    inherit = XdgpAdaptive(placement="inherit")   # same name as "xdgp"!
+    system = DynamicGraphSystem(g, cfg, strategy=inherit)
+    system.adapt(2)
+    system.save(str(tmp_path / "ckpt"))
+    with pytest.raises(ValueError, match="strategy"):
+        DynamicGraphSystem.restore(str(tmp_path / "ckpt"))
+    resumed = DynamicGraphSystem.restore(str(tmp_path / "ckpt"),
+                                         strategy=inherit)
+    assert resumed.strategy is inherit
+
+
+def test_restore_refuses_dropped_program_override(tmp_path):
+    """A same-config session with a *program* constructor override must be
+    handed the same program back on restore — the config would silently
+    rebuild a different vertex program otherwise."""
+    from repro.core.vertex_program import make_program
+
+    n, window = 120, 60
+    times, u, v = generators.sliding_window_stream(n, 800, window, seed=1)
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=30),
+        partition=PartitionSection(strategy="xdgp", k=4, adapt_iters=2))
+    prog = make_program("degree")
+    system = DynamicGraphSystem(empty_graph(n, 2000), cfg, program=prog)
+    system.run((times, u, v), max_supersteps=3)
+    system.save(str(tmp_path / "ckpt"))
+    with pytest.raises(ValueError, match="program override"):
+        DynamicGraphSystem.restore(str(tmp_path / "ckpt"))
+    resumed = DynamicGraphSystem.restore(str(tmp_path / "ckpt"),
+                                         program=prog)
+    assert resumed.program is prog
+    assert np.array_equal(np.asarray(resumed.program_state),
+                          np.asarray(system.program_state))
+
+
+def test_restore_rejects_non_session_checkpoints(tmp_path):
+    from repro.checkpoint import Checkpointer
+
+    ckpt = Checkpointer(str(tmp_path / "raw"), use_async=False)
+    ckpt.save(0, {"weights": np.zeros((3,))})
+    with pytest.raises(ValueError, match="session checkpoint"):
+        DynamicGraphSystem.restore(str(tmp_path / "raw"))
+
+
+# ---------------------------------------------------------------------------
+# The parity property: local == sharded, bit for bit (8 fake devices)
+# ---------------------------------------------------------------------------
+
+def test_local_vs_sharded_parity_property():
+    """Random dynamic graphs: the sharded backend's assignments are
+    bit-identical to local across full streamed runs, converge, and
+    distribute()/gather() round-trips; the capacity invariant holds
+    throughout. (The ISSUE's parity acceptance criterion.)"""
+    _run("""
+import numpy as np
+from repro.api import DynamicGraphSystem, PartitionSection, StreamSection, \
+    SystemConfig, empty_graph
+from repro.graph import generators
+from repro.stream.ingest import stream_batches
+
+for seed in (0, 1, 2):
+    n, window = 220 + 40 * seed, 100 + 20 * seed
+    times, u, v = generators.sliding_window_stream(n, 2600, window, seed=seed)
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=window // 2),
+        partition=PartitionSection(strategy="xdgp", k=8,
+                                   adapt_iters=3 + seed % 3),
+        seed=seed)
+
+    local = DynamicGraphSystem(empty_graph(n, 5000), cfg)
+    recs_l = local.run((times, u, v))
+    shard = DynamicGraphSystem(empty_graph(n, 5000),
+                               cfg.with_cluster(backend="sharded"))
+    recs_s = shard.run((times, u, v))
+
+    assert np.array_equal(np.asarray(local.labels), np.asarray(shard.labels)), seed
+    assert [r.cut_ratio for r in recs_l] == [r.cut_ratio for r in recs_s], seed
+    assert [r.migrations for r in recs_l] == [r.migrations for r in recs_s], seed
+    # sharded telemetry gains comm counters; local stays at zero
+    assert sum(r.halo_bytes for r in recs_s) > 0 and \
+        all(r.halo_bytes == 0 for r in recs_l), seed
+    occ = np.asarray(shard.tracker.occupancy)
+    assert (occ <= np.asarray(shard.state.capacity)).all(), seed
+
+    # mid-run distribute()/gather() round-trip changes nothing
+    rt = DynamicGraphSystem(empty_graph(n, 5000), cfg)
+    batches = list(stream_batches(times, u, v, window // 2))
+    third = max(1, len(batches) // 3)
+    for now, ev in batches[:third]:
+        rt.step(ev, now)
+    rt.distribute()
+    assert rt.backend.name == "sharded"
+    for now, ev in batches[third:2 * third]:
+        rt.step(ev, now)
+    rt.gather()
+    for now, ev in batches[2 * third:]:
+        rt.step(ev, now)
+    assert np.array_equal(np.asarray(local.labels), np.asarray(rt.labels)), seed
+
+# batch mode: converge() parity including the recorded History
+g = generators.fem_cube(10)
+cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=8,
+                                              max_iters=60, patience=10))
+a = DynamicGraphSystem(g, cfg)
+h1 = a.converge()
+b = DynamicGraphSystem(g, cfg.with_cluster(backend="sharded"))
+h2 = b.converge()
+assert np.array_equal(np.asarray(a.labels), np.asarray(b.labels))
+assert h1.as_dict() == h2.as_dict()
+stats = b.snapshot()["cluster"]
+assert stats["devices"] == 8 and stats["halo_bytes_total"] > 0
+print("OK")
+""")
+
+
+def test_sharded_save_restore_round_trip():
+    """A sharded session snapshots its canonical state and resumes sharded,
+    continuing the exact local-reference trajectory (ISSUE acceptance:
+    rescale/save/restore round-trip a mid-run session)."""
+    _run("""
+import numpy as np, tempfile
+from repro.api import DynamicGraphSystem, PartitionSection, StreamSection, \
+    SystemConfig, empty_graph
+from repro.graph import generators
+from repro.stream.ingest import stream_batches
+
+n, window = 260, 120
+times, u, v = generators.sliding_window_stream(n, 3000, window, seed=5)
+cfg = SystemConfig(
+    stream=StreamSection(window=window, batch_span=window // 2),
+    partition=PartitionSection(strategy="xdgp", k=8, adapt_iters=4))
+
+ref = DynamicGraphSystem(empty_graph(n, 5000), cfg)
+ref.run((times, u, v))
+
+shard = DynamicGraphSystem(empty_graph(n, 5000),
+                           cfg.with_cluster(backend="sharded"))
+batches = list(stream_batches(times, u, v, window // 2))
+half = len(batches) // 2
+for now, ev in batches[:half]:
+    shard.step(ev, now)
+with tempfile.TemporaryDirectory() as d:
+    shard.save(d)
+    resumed = DynamicGraphSystem.restore(d)
+assert resumed.backend.name == "sharded"     # cluster section survived
+for now, ev in batches[half:]:
+    resumed.step(ev, now)
+assert np.array_equal(np.asarray(ref.labels), np.asarray(resumed.labels))
+
+# elastic rescale on the sharded backend: k 8 -> 6 re-meshes to 6 devices
+report = resumed.rescale(6, lost=(1, 4), adapt_iters=30)
+assert report["cut_after_adapt"] < report["cut_after_rehash"]
+assert resumed.backend.name == "sharded"
+occ = np.asarray(resumed.tracker.occupancy)
+assert occ.shape == (6,) and (occ <= np.asarray(resumed.state.capacity)).all()
+
+# a rescale the cluster cannot serve fails BEFORE mutating the session
+try:
+    resumed.rescale(12, adapt_iters=5)
+    raise SystemExit("rescale(12) should have raised on an 8-device host")
+except RuntimeError as e:
+    assert "12 devices" in str(e), e
+assert resumed.config.partition.k == 6           # untouched
+assert np.asarray(resumed.tracker.occupancy).shape == (6,)
+resumed.adapt(2)                                 # still fully usable
+print("OK")
+""")
+
+
+# ---------------------------------------------------------------------------
+# In-process sharded checks (run under the tier-1-sharded CI job)
+# ---------------------------------------------------------------------------
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@needs_devices
+def test_sharded_converge_parity_in_process():
+    g = generators.fem_cube(8)
+    cfg = SystemConfig(partition=PartitionSection(strategy="xdgp", k=8,
+                                                  max_iters=40, patience=8))
+    a = DynamicGraphSystem(g, cfg)
+    a.converge(record_history=False)
+    b = DynamicGraphSystem(g, cfg.with_cluster(backend="sharded"))
+    b.converge(record_history=False)
+    assert np.array_equal(np.asarray(a.labels), np.asarray(b.labels))
+
+
+@needs_devices
+def test_sharded_static_baseline_is_free():
+    """Non-adapting strategies fall through to their local no-op hooks —
+    a sharded static baseline exchanges nothing."""
+    n, window = 200, 100
+    times, u, v = generators.sliding_window_stream(n, 1500, window, seed=2)
+    cfg = SystemConfig(
+        stream=StreamSection(window=window, batch_span=50),
+        partition=PartitionSection(strategy="static", k=8),
+        cluster=ClusterSection(backend="sharded"))
+    system = DynamicGraphSystem(empty_graph(n, 4000), cfg)
+    recs = system.run((times, u, v), max_supersteps=5)
+    assert all(r.halo_bytes == 0 and r.collective_bytes == 0 for r in recs)
+    assert sum(r.migrations for r in recs) == 0

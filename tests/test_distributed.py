@@ -1,6 +1,8 @@
-"""Distributed engine tests — run in a subprocess with 8 fake devices
+"""Distributed engine tests — run in a subprocess with fake devices
 (XLA locks the device count at first init, so tests that need >1 device
-must re-exec)."""
+must re-exec). The fake-device count is set ONLY through the subprocess
+environment — snippets must not mutate ``os.environ`` themselves, so no
+setting can leak between tests or into this process."""
 import os
 import subprocess
 import sys
@@ -10,9 +12,9 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(snippet: str) -> str:
+def _run(snippet: str, devices: int = 8) -> str:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = subprocess.run([sys.executable, "-c", snippet], env=env,
                          capture_output=True, text=True, timeout=600)
@@ -145,13 +147,13 @@ print("OK", err)
 
 
 def test_production_mesh_shapes():
+    # 512 fake devices come from the subprocess env (the _run fixture), not
+    # an in-snippet os.environ mutation that could outlive the test
     _run("""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 from repro.launch.mesh import make_production_mesh
 m1 = make_production_mesh(multi_pod=False)
 assert dict(m1.shape) == {"data": 16, "model": 16}
 m2 = make_production_mesh(multi_pod=True)
 assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
 print("OK")
-""")
+""", devices=512)
