@@ -9,7 +9,14 @@ The cluster engine's selling points, measured from the session itself:
   * comm bill  — per-superstep halo/collective byte telemetry. The halo
                  volume is the boundary the adaptive heuristic shrinks, so
                  the adaptive run's comm bill falls as the cut falls —
-                 "cut == comm volume" made measurable end to end.
+                 "cut == comm volume" made measurable end to end;
+  * gap trace  — both runs execute with span tracing on (plus the sharded
+                 comm probe, DESIGN.md §11) and emit
+                 ``results/trace_distributed_e2e_{local,sharded}.jsonl``, a
+                 Chrome/Perfetto export, and a per-phase local-vs-sharded
+                 gap summary — the measurement baseline attributing the
+                 sharded slowdown to named phases (bucketing, dispatch,
+                 halo exchange, quota collective, kernel, host sync).
 
 Must launch with enough devices; the script re-execs itself with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=<k>`` if the host
@@ -37,17 +44,22 @@ if __name__ == "__main__" and "_REPRO_REEXEC" not in os.environ:
         env["_REPRO_REEXEC"] = "1"
         raise SystemExit(subprocess.call([sys.executable, *sys.argv], env=env))
 
+import dataclasses
+
 import numpy as np
 
-from benchmarks.common import save
+from benchmarks.common import RESULTS_DIR, save
+from repro.api import DynamicGraphSystem
 from repro.scenarios import SCENARIOS
-from repro.scenarios.harness import _system
 
 SCALES = {"smoke": 12, "small": 40, "full": None}   # max supersteps
 
 
 def run_one(scn, *, cluster: str, max_supersteps):
-    system = _system(scn, strategy="xdgp", cluster=cluster)
+    cfg = scn.system_config(strategy="xdgp", cluster=cluster)
+    cfg = dataclasses.replace(cfg, telemetry=dataclasses.replace(
+        cfg.telemetry, trace=True, trace_comm_probe=True))
+    system = DynamicGraphSystem(scn.graph, cfg)
     t0 = time.perf_counter()
     recs = system.run(scn, max_supersteps=max_supersteps)
     wall = time.perf_counter() - t0
@@ -66,7 +78,7 @@ def run_one(scn, *, cluster: str, max_supersteps):
         "cut_ratio_per_superstep": [r.cut_ratio for r in recs],
         "cluster_stats": system.snapshot()["cluster"],
     }
-    return row, np.asarray(system.labels)
+    return row, np.asarray(system.labels), system.tracer
 
 
 def main() -> None:
@@ -80,10 +92,10 @@ def main() -> None:
         "smoke" if args.scale == "smoke" else "small", seed=0)
     max_ss = SCALES[args.scale]
 
-    local_row, local_labels = run_one(scn, cluster="local",
-                                      max_supersteps=max_ss)
-    shard_row, shard_labels = run_one(scn, cluster="sharded",
-                                      max_supersteps=max_ss)
+    local_row, local_labels, local_tr = run_one(scn, cluster="local",
+                                                max_supersteps=max_ss)
+    shard_row, shard_labels, shard_tr = run_one(scn, cluster="sharded",
+                                                max_supersteps=max_ss)
 
     bit_identical = bool(np.array_equal(local_labels, shard_labels))
     cuts_identical = (local_row["cut_trajectory"]
@@ -110,6 +122,38 @@ def main() -> None:
         "sharded": shard_row,
     }
     path = save("bench_distributed_e2e", payload)
+
+    # -- the gap trace (DESIGN.md §11): where does local-vs-sharded go? ----
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    local_trace = local_tr.write_jsonl(
+        os.path.join(RESULTS_DIR, "trace_distributed_e2e_local.jsonl"))
+    shard_trace = shard_tr.write_jsonl(
+        os.path.join(RESULTS_DIR, "trace_distributed_e2e_sharded.jsonl"))
+    shard_tr.write_chrome(
+        os.path.join(RESULTS_DIR, "trace_distributed_e2e.trace.json"))
+    sum_l, sum_s = local_tr.phase_totals(), shard_tr.phase_totals()
+    gap = {
+        "scenario": scn.name, "k": scn.k, "scale": args.scale,
+        "wall_local_s": local_row["wall_seconds"],
+        "wall_sharded_s": shard_row["wall_seconds"],
+        "slowdown": shard_row["wall_seconds"] / local_row["wall_seconds"],
+        "phases_local": sum_l,
+        "phases_sharded": sum_s,
+        # phases only the sharded path has, ranked: the slowdown, named
+        "sharded_only_total_s": {n: sum_s[n]["total_s"]
+                                 for n in sorted(set(sum_s) - set(sum_l),
+                                                 key=lambda n:
+                                                 -sum_s[n]["total_s"])},
+    }
+    save("trace_distributed_e2e", gap)
+    print(f"{'phase':<24} {'local':>10} {'sharded':>10}")
+    for name in sorted(set(sum_l) | set(sum_s),
+                       key=lambda n: -sum_s.get(n, {"total_s": 0})["total_s"]):
+        tl = sum_l.get(name, {}).get("total_s", 0.0)
+        ts = sum_s.get(name, {}).get("total_s", 0.0)
+        print(f"{name:<24} {tl * 1e3:9.1f}ms {ts * 1e3:9.1f}ms")
+    print(f"traces -> {local_trace}, {shard_trace}")
+
     print(f"scenario={scn.name} k={scn.k} scale={args.scale}")
     print(f"  parity: assignments bit-identical={bit_identical} "
           f"cut trajectories identical={cuts_identical}")

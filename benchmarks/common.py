@@ -10,23 +10,38 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.core.vertex_program import CostModel
+from repro.obs.manifest import run_manifest
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
 
 
-def save(name: str, payload: Any) -> str:
+def save(name: str, payload: Any, *, config: Any = None) -> str:
+    """Write a result payload, stamped with a provenance manifest (git sha,
+    jax versions, device kind, timestamp — DESIGN.md §11) so committed
+    numbers stay citable.  ``config`` adds its hash to the manifest."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if isinstance(payload, dict) and "manifest" not in payload:
+        payload = {**payload, "manifest": run_manifest(config)}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return path
 
 
-def timed(fn, *args, repeats: int = 1, **kw):
-    t0 = time.perf_counter()
+def timed(fn, *args, repeats: int = 1, warmup: int = 0, **kw):
+    """Mean wall time of ``fn`` with a sync fence per call.
+
+    JAX dispatch is asynchronous: without ``jax.block_until_ready`` on the
+    result this would measure dispatch, not device time.  ``warmup`` extra
+    un-timed calls first absorb jit compilation.
+    """
+    import jax
     out = None
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
     for _ in range(repeats):
-        out = fn(*args, **kw)
+        out = jax.block_until_ready(fn(*args, **kw))
     dt = (time.perf_counter() - t0) / repeats
     return out, dt
 

@@ -26,9 +26,9 @@ import json
 import os
 from typing import Any, Dict, Optional
 
-PEAK_FLOPS = 197e12           # bf16 / chip
-HBM_BW = 819e9                # bytes/s / chip
-ICI_BW = 50e9                 # bytes/s / link (conservative single-link)
+# peaks live in the observability layer (single source, shared with
+# plan_cost kernel estimates — DESIGN.md §11)
+from repro.obs.profiling import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 
 
 def _param_counts():

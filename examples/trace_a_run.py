@@ -1,0 +1,48 @@
+"""Trace a run: enable span tracing on a paper scenario and read the
+per-phase report (DESIGN.md §11).
+
+  PYTHONPATH=src python examples/trace_a_run.py
+
+Tracing is off by default; one config knob turns it on.  The session then
+records a span for every superstep phase (ingest → place → migrate →
+compute → commit, plus the sharded backend's bucket/dispatch/comm
+children), exports JSONL + Chrome trace_event files, and the report CLI
+summarises where the time went:
+
+  python -m repro.obs.report /tmp/trace_demo.jsonl
+"""
+import dataclasses
+import tempfile
+import os
+
+from repro.api import DynamicGraphSystem
+from repro.obs.report import render, summarize, _top_level_total
+from repro.obs.schema import validate_trace_file
+from repro.scenarios import SCENARIOS
+
+
+def main() -> None:
+    scn = SCENARIOS["cellular"]("smoke", seed=0)
+    cfg = scn.system_config(strategy="xdgp")
+    cfg = dataclasses.replace(cfg, telemetry=dataclasses.replace(
+        cfg.telemetry, trace=True, metrics=True))
+
+    system = DynamicGraphSystem(scn.graph, cfg)
+    system.run(scn, max_supersteps=8)
+
+    out = os.path.join(tempfile.mkdtemp(prefix="repro_trace_"),
+                       "trace_demo.jsonl")
+    system.tracer.write_jsonl(out)
+    system.tracer.write_chrome(out.replace(".jsonl", ".trace.json"))
+
+    # the same aggregation `python -m repro.obs.report <file>` prints
+    events = validate_trace_file(out)
+    print(render(summarize(events), _top_level_total(events), label=out))
+
+    print("\nmetrics (Prometheus text, first lines):")
+    print("\n".join(system.metrics.to_prometheus().splitlines()[:8]))
+    print(f"\nfull trace -> {out} (open the .trace.json in ui.perfetto.dev)")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,9 +36,11 @@ Example — resolve backends from the registry (doctested in CI):
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import ClusterSection
@@ -52,6 +54,7 @@ from repro.core.repartitioner import History
 from repro.core.repartitioner import adapt_rounds as _adapt_rounds
 from repro.core.repartitioner import run_to_convergence as _run_to_convergence
 from repro.graph.structure import Graph
+from repro.obs.trace import NULL_TRACER
 
 
 @runtime_checkable
@@ -133,12 +136,20 @@ class LocalBackend:
     """On-host execution: straight delegation to the strategy hooks."""
 
     name = "local"
+    # the session re-points these at its own tracer/config (DESIGN.md §11);
+    # a directly-constructed backend stays on the no-op defaults
+    tracer: Any = NULL_TRACER
+    comm_probe = False
 
     def __init__(self, cluster: Optional[ClusterSection] = None):
         self.cluster = cluster if cluster is not None else ClusterSection()
 
     def adapt(self, strategy, graph, state, ctx):
-        return strategy.adapt(graph, state, ctx)
+        with self.tracer.span("kernel/score_select",
+                              iters=ctx.adapt_iters) as sp:
+            state = strategy.adapt(graph, state, ctx)
+            sp.fence(state.assignment)
+        return state
 
     def converge(self, strategy, graph, state, ctx):
         return strategy.converge(graph, state, ctx)
@@ -176,6 +187,8 @@ class ShardedBackend:
     """
 
     name = "sharded"
+    tracer: Any = NULL_TRACER
+    comm_probe = False                # timed comm mirrors (telemetry knob)
 
     def __init__(self, cluster: Optional[ClusterSection] = None):
         self.cluster = (cluster if cluster is not None
@@ -187,6 +200,7 @@ class ShardedBackend:
         self._layout: Optional[BlockLayout] = None
         self._comm: Optional[Dict[str, Any]] = None
         self._migrators: Dict[Tuple[float, str], Any] = {}
+        self._probed = False
         self._superstep_comm = dict(_ZERO_COMM)
         self._total_comm = dict(_ZERO_COMM)
         self._total_iterations = 0
@@ -214,6 +228,7 @@ class ShardedBackend:
         self._graph_ref = None
         self._dg = self._layout = self._comm = None
         self._migrators.clear()
+        self._probed = False
 
     def _ensure(self, graph: Graph, state: PartitionState,
                 ctx: StrategyContext) -> None:
@@ -224,10 +239,15 @@ class ShardedBackend:
             self._mesh_devices = P
             self._graph_ref = None            # block size may change with P
         if self._graph_ref is not graph:
-            self._dg, self._layout = build_cluster_graph(
-                graph, np.asarray(state.assignment), P,
-                halo_pad=self.cluster.halo_pad)
-            self._comm = comm_model(self._dg, ctx.k)
+            # host-side bucketing: a prime suspect for the sharded slowdown
+            # (runs every streaming superstep), hence its own span
+            with self.tracer.span("cluster/bucket", devices=P) as sp:
+                self._dg, self._layout = build_cluster_graph(
+                    graph, np.asarray(state.assignment), P,
+                    halo_pad=self.cluster.halo_pad)
+                self._comm = comm_model(self._dg, ctx.k)
+                sp.set(halo_slots=self._dg.halo_size,
+                       block=self._dg.block_size)
             self._migrators.clear()
             self._graph_ref = graph
 
@@ -284,15 +304,120 @@ class ShardedBackend:
         mesh's sharding — it may be gone after a gather()/rescale()."""
         return jax.device_put(state, jax.devices()[0])
 
+    # -- comm probe (DESIGN.md §11) ----------------------------------------
+    def _probe_comm(self, state, ctx) -> None:
+        """Attribute one migrator iteration to named comm phases.
+
+        The halo exchange and the packed-key quota collective live *inside*
+        one jit'd shard_map program, so they cannot be host-timed in situ.
+        Instead, tiny jits mirroring exactly those collectives (same shapes,
+        same mesh) are timed with fences — min of 3 reps after a compile
+        warmup — alongside one full migrator iteration (pure function,
+        results discarded: the session trajectory is untouched).  The
+        decomposition enters the trace as synthetic spans:
+
+          comm/halo_exchange     boundary-segment all_gather
+          comm/quota_collective  packed-key all_gather + global sort
+          kernel/score           residual (scoring + decide + damp + commit)
+
+        Probes run ONCE per session (first adapt after enabling): the
+        streaming path rebuilds the bucketing every superstep, and
+        re-compiling the probe jits each time would dominate the very wall
+        time the trace is meant to attribute.  The probe's own cost
+        (compiles + reps) is visible as an ``obs/comm_probe`` span.
+        """
+        mesh, dg, axis = self._mesh, self._dg, self.cluster.axis
+        from repro.compat import shard_map
+        spec_n = jax.sharding.PartitionSpec(axis)
+        dg_specs = DistGraph(*([spec_n] * 8))
+        rep = jax.sharding.PartitionSpec()
+        P, n_blk = dg.num_devices, dg.block_size
+
+        @jax.jit
+        def halo_probe(flat):
+            f = shard_map(
+                lambda lf, dgl: jax.lax.all_gather(
+                    jnp.where(dgl.boundary_ok[0], lf[dgl.boundary[0]], 0),
+                    axis, tiled=True),
+                mesh=mesh, in_specs=(spec_n, dg_specs), out_specs=rep)
+            return f(flat, dg)
+
+        @jax.jit
+        def quota_probe(keys):
+            f = shard_map(
+                lambda kb: jnp.sort(jax.lax.all_gather(kb, axis,
+                                                       tiled=True)),
+                mesh=mesh, in_specs=(spec_n,), out_specs=rep)
+            return f(keys)
+
+        @jax.jit
+        def null_probe(x):
+            # dispatch floor: a do-nothing shard_map of the same shape —
+            # subtracted so the probes report collective cost, not the
+            # per-dispatch overhead every tiny jit pays
+            f = shard_map(lambda xb: xb + 1, mesh=mesh, in_specs=(spec_n,),
+                          out_specs=spec_n)
+            return f(x)
+
+        def best_of(fn, *a, reps: int = 3) -> float:
+            jax.block_until_ready(fn(*a))           # compile warmup
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*a))
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        with self.tracer.span("obs/comm_probe", devices=P):
+            flat = jnp.zeros((P * n_blk,), jnp.int32)
+            t_null = best_of(null_probe, flat)
+            raw_halo = best_of(halo_probe, flat)
+            raw_quota = best_of(quota_probe, flat)
+            t_halo = max(raw_halo - t_null, 0.0)
+            t_quota = max(raw_quota - t_null, 0.0)
+            mig_step = self._step_fn(self._graph_ref, ctx)
+
+            def full_iter():
+                s2, _ = mig_step(state)             # pure: result discarded
+                return s2.assignment
+
+            t_full = best_of(full_iter)
+        # the extra _charge() calls from probe iterations are rolled back —
+        # the probe must not inflate the session's comm telemetry
+        self._charge(-(1 + 3))
+        residual = max(t_full - t_null - t_halo - t_quota, 0.0)
+        tr = self.tracer
+        tr.add_span("comm/halo_exchange", t_halo, probed=True,
+                    halo_slots=dg.halo_size, raw_s=raw_halo,
+                    dispatch_floor_s=t_null)
+        tr.add_span("comm/quota_collective", t_quota, probed=True,
+                    raw_s=raw_quota, dispatch_floor_s=t_null)
+        tr.add_span("kernel/score", residual, probed=True,
+                    full_iter_s=t_full)
+
     # -- execution hooks ----------------------------------------------------
     def adapt(self, strategy, graph, state, ctx):
         if not getattr(strategy, "adapts", False):
             return strategy.adapt(graph, state, ctx)
         self._ensure(graph, state, ctx)
+        first = (ctx.s, ctx.tie_break) not in self._migrators
         step = self._step_fn(graph, ctx)
-        for _ in range(ctx.adapt_iters):
-            state, _ = step(state)
-        return flush_pending(self._unshard(state), graph)
+        tr = self.tracer
+        if tr.enabled and self.comm_probe and not self._probed:
+            self._probed = True
+            self._probe_comm(state, ctx)
+        with tr.span("cluster/dispatch", iters=ctx.adapt_iters,
+                     compiled=first) as sp:
+            for _ in range(ctx.adapt_iters):
+                state, _ = step(state)
+            sp.fence(state.assignment)
+        with tr.span("cluster/host_sync") as sp:
+            state = self._unshard(state)
+            sp.fence(state.assignment)
+        with tr.span("cluster/flush") as sp:
+            state = flush_pending(state, graph)
+            sp.fence(state.assignment)
+        return state
 
     def converge(self, strategy, graph, state, ctx):
         if not getattr(strategy, "adapts", False):

@@ -127,6 +127,11 @@ class TelemetrySection:
 
     recompute_every: int = 10      # supersteps between full drift checks (0 = off)
     bsr_blk: int = 32              # tile size for snapshot() BSR stats
+    trace: bool = False            # span tracing (repro.obs.trace; <3% overhead
+                                   # budget, DESIGN.md §11)
+    trace_comm_probe: bool = False # also time halo/collective mirrors per graph
+                                   # rebuild (sharded only; adds probe dispatches)
+    metrics: bool = False          # fold SuperstepRecords into a MetricsRegistry
 
 
 _SECTIONS = {

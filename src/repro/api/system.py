@@ -94,6 +94,8 @@ from repro.core.vertex_program import (CostModel, VertexProgram, make_program,
                                        message_volume)
 from repro.core.vertex_program import superstep as program_superstep
 from repro.api.telemetry import SuperstepRecord
+from repro.obs.metrics import MetricsRegistry, record_superstep
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.graph.bsr import bsr_density_stats, graph_to_bsr
 from repro.graph.structure import Graph, GraphDelta, apply_delta, from_edges
 from repro.graph.structure import cut_ratio as graph_cut_ratio
@@ -184,6 +186,21 @@ class DynamicGraphSystem:
                                          else p.strategy)
         self.backend = resolve_execution_backend(cfg.cluster.backend,
                                                  cluster=cfg.cluster)
+        # observability (DESIGN.md §11): disabled sessions hold the shared
+        # NULL_TRACER, whose hooks are constant-time no-ops — the superstep
+        # pays no clock reads, fences or allocation unless telemetry.trace
+        # turned tracing on
+        if cfg.telemetry.trace:
+            self.tracer: Any = Tracer(meta={
+                "label": f"{self.strategy.name}/{cfg.cluster.backend}",
+                "strategy": self.strategy.name,
+                "backend": cfg.cluster.backend, "k": cfg.partition.k})
+        else:
+            self.tracer = NULL_TRACER
+        self.backend.tracer = self.tracer
+        self.backend.comm_probe = cfg.telemetry.trace_comm_probe
+        self.metrics: Optional[MetricsRegistry] = (
+            MetricsRegistry() if cfg.telemetry.metrics else None)
         # remembered so compare() can replay identical fresh sessions
         self._initial_graph = graph
         self._initial_assignment = assignment
@@ -286,9 +303,13 @@ class DynamicGraphSystem:
             ev = np.asarray(events)
             now = int(ev[:, 0].max()) if ev.size else self._now
         t_start = time.perf_counter()
+        tr = self.tracer
+        sp_step = tr.span("superstep", superstep=self._superstep + 1)
+        sp_step.__enter__()
 
         # 1. INGEST: vectorized batch → one padded GraphDelta
-        delta, istats = self.ingestor.ingest(events, now)
+        with tr.span("ingest"):
+            delta, istats = self.ingestor.ingest(events, now)
         t_ingest = time.perf_counter() - t_start
 
         # 2. APPLY + PLACE: grow/shrink the graph, route arrivals through the
@@ -302,19 +323,26 @@ class DynamicGraphSystem:
             labels_placed = labels_before
             new_placed = 0
         else:
-            after = apply_delta(before, delta)
-            labels_placed, new_placed = self._place(delta, before, after)
+            with tr.span("place", adds=istats.adds_out,
+                         dels=istats.dels_out) as sp:
+                after = apply_delta(before, delta)
+                labels_placed, new_placed = self._place(delta, before, after)
 
-            # 3. MEASURE the ingest: incremental cut/occupancy from diffs only
-            self.tracker, _ = delta_update(self.tracker, before, after,
-                                           labels_before, labels_placed)
+                # 3. MEASURE the ingest: incremental cut/occupancy from
+                # diffs only
+                self.tracker, _ = delta_update(self.tracker, before, after,
+                                               labels_before, labels_placed)
+                sp.fence(labels_placed, self.tracker.cut)
 
         # 4. ADAPT: the strategy's interleaved rounds on the new graph,
         # executed wherever the session's backend runs (local / sharded)
         state = dataclasses.replace(self.state, assignment=labels_placed)
-        state = self.backend.adapt(self.strategy, after, state, self._ctx())
-        self.tracker, moved = move_update(self.tracker, after,
-                                          labels_placed, state.assignment)
+        with tr.span("migrate") as sp:
+            state = self.backend.adapt(self.strategy, after, state,
+                                       self._ctx())
+            self.tracker, moved = move_update(self.tracker, after,
+                                              labels_placed, state.assignment)
+            sp.fence(state.assignment, self.tracker.cut)
         comm = self.backend.pop_superstep_comm()
 
         self.graph = after
@@ -339,20 +367,23 @@ class DynamicGraphSystem:
         local_bytes = remote_bytes = 0
         compute_seconds = 0.0
         if self.program is not None:
-            t_c = time.perf_counter()
-            self.program_state = self._prog_step(
-                before.node_mask, after, self.program_state,
-                jnp.asarray(self._superstep, jnp.int32))
-            self.program_state.block_until_ready()
-            compute_seconds = time.perf_counter() - t_c
-            lb, rb = self._msg_volume(after, state.assignment)
-            local_bytes, remote_bytes = int(lb), int(rb)
+            with tr.span("compute"):
+                t_c = time.perf_counter()
+                self.program_state = self._prog_step(
+                    before.node_mask, after, self.program_state,
+                    jnp.asarray(self._superstep, jnp.int32))
+                self.program_state.block_until_ready()
+                compute_seconds = time.perf_counter() - t_c
+                lb, rb = self._msg_volume(after, state.assignment)
+                local_bytes, remote_bytes = int(lb), int(rb)
 
         # 6. DRIFT CHECK: periodic full recompute validates the tracker
         drift = None
         every = cfg.telemetry.recompute_every
-        if every and self._superstep % every == 0:
-            self.tracker, drift = drift_check(self.tracker, after, state.assignment)
+        with tr.span("commit"):
+            if every and self._superstep % every == 0:
+                self.tracker, drift = drift_check(self.tracker, after,
+                                                  state.assignment)
 
         record = SuperstepRecord(
             superstep=self._superstep, now=int(now),
@@ -374,6 +405,12 @@ class DynamicGraphSystem:
             collective_bytes=comm["collective_bytes"],
         )
         self.telemetry.append(record)
+        sp_step.set(migrations=int(moved), cut_ratio=record.cut_ratio)
+        sp_step.__exit__(None, None, None)
+        tr.counter("migrations", record.migrations)
+        if self.metrics is not None:
+            record_superstep(self.metrics, record,
+                             backend=self.backend.name)
         return record
 
     # -- windowed replay of a whole stream ----------------------------------
@@ -468,6 +505,8 @@ class DynamicGraphSystem:
         else:
             self.backend = resolve_execution_backend(backend_name,
                                                      cluster=cfg.cluster)
+            self.backend.tracer = self.tracer
+            self.backend.comm_probe = cfg.telemetry.trace_comm_probe
         self.config = cfg
 
     def distribute(self, *, devices: Optional[int] = None,
@@ -489,6 +528,8 @@ class DynamicGraphSystem:
             self.backend.invalidate()
         else:
             self.backend = candidate          # the validated instance
+            self.backend.tracer = self.tracer
+            self.backend.comm_probe = cfg.telemetry.trace_comm_probe
         self.config = cfg
         return self
 

@@ -1,0 +1,85 @@
+"""Run manifests: the provenance block every result file carries
+(DESIGN.md §11).
+
+A committed benchmark number is only citable if the environment that
+produced it is recorded next to it.  ``run_manifest()`` captures the facts
+that change results — git sha, jax/jaxlib versions, device kind and count,
+the resolved kernel executor — plus a UTC timestamp and (optionally) a
+stable hash of the ``SystemConfig`` that drove the run.
+``benchmarks.common.save`` attaches one to every payload automatically.
+"""
+from __future__ import annotations
+
+import datetime
+import hashlib
+import json
+import platform
+import subprocess
+import sys
+from typing import Any, Dict, Optional
+
+MANIFEST_VERSION = 1
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    """Current commit sha (+ ``-dirty`` suffix), None outside a repo."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=cwd,
+                             capture_output=True, text=True, timeout=10)
+        if sha.returncode != 0:
+            return None
+        dirty = subprocess.run(["git", "status", "--porcelain"], cwd=cwd,
+                               capture_output=True, text=True, timeout=10)
+        suffix = "-dirty" if dirty.returncode == 0 and dirty.stdout.strip() \
+            else ""
+        return sha.stdout.strip() + suffix
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def config_hash(config: Any) -> Optional[str]:
+    """Stable short hash of a ``SystemConfig`` (or any ``to_dict`` object /
+    plain dict) — two runs with the same hash ran the same knobs."""
+    if config is None:
+        return None
+    d = config.to_dict() if hasattr(config, "to_dict") else config
+    blob = json.dumps(d, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def run_manifest(config: Any = None, **extra: Any) -> Dict[str, Any]:
+    """The provenance block: environment facts that make a number citable.
+
+    Imports jax lazily so manifest writing works (with nulled device
+    fields) even where jax failed to initialise.
+    """
+    out: Dict[str, Any] = {
+        "manifest_version": MANIFEST_VERSION,
+        "git_sha": git_sha(),
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        import jaxlib
+        from repro import compat
+        dev = jax.devices()[0]
+        out.update(
+            jax_version=jax.__version__,
+            jaxlib_version=jaxlib.__version__,
+            backend=jax.default_backend(),
+            device_kind=getattr(dev, "device_kind", str(dev)),
+            device_count=jax.device_count(),
+            pallas_executor=compat.pallas_executor(),
+        )
+    except Exception as e:                           # pragma: no cover
+        out.update(jax_version=None, jaxlib_version=None, backend=None,
+                   device_kind=None, device_count=0,
+                   pallas_executor=None, jax_error=repr(e))
+    h = config_hash(config)
+    if h is not None:
+        out["config_hash"] = h
+    out.update(extra)
+    return out

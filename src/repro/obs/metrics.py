@@ -1,0 +1,238 @@
+"""Metrics registry: counters / gauges / histograms over the runtime
+(DESIGN.md §11).
+
+``SuperstepRecord`` already carries the per-superstep facts (halo bytes,
+collective bytes, migrations, backlog, …) as ad-hoc dataclass fields, and
+``snapshot()["cluster"]`` carries the per-device comm bill — but neither is
+a time series a scrape can consume.  This module unifies them behind one
+registry:
+
+    reg = MetricsRegistry(namespace="repro")
+    reg.counter("events_total").inc(128)
+    reg.gauge("cut_ratio").set(0.21)
+    reg.histogram("step_seconds").observe(0.04)
+
+``record_superstep`` maps a ``SuperstepRecord`` onto the registry (the one
+place the mapping lives, snapshot-tested so exporters fail loudly instead
+of drifting), and ``record_cluster`` maps the per-device stats with a
+``device`` label.  Two exports:
+
+* ``write_jsonl(path)``  — one sample per line plus a ``meta`` header
+  (validated by ``repro.obs.schema``);
+* ``to_prometheus()``    — Prometheus text exposition format (the serving
+  layer's scrape endpoint body).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+METRICS_SCHEMA_VERSION = 1
+
+# default histogram buckets: wall-clock seconds, log-ish spaced
+DEFAULT_BUCKETS = (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0)
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _labelkey(labels: Dict[str, Any]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _labelstr(key: LabelKey) -> str:
+    if not key:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+
+
+class Counter:
+    """Monotonically increasing total, optionally per label set."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.values: Dict[LabelKey, float] = {}
+
+    def inc(self, value: float = 1.0, **labels: Any) -> None:
+        if value < 0:
+            raise ValueError(f"counter {self.name} cannot decrease "
+                             f"(inc({value}))")
+        key = _labelkey(labels)
+        self.values[key] = self.values.get(key, 0.0) + value
+
+    def samples(self) -> Iterable[Tuple[str, LabelKey, float]]:
+        for key, v in sorted(self.values.items()):
+            yield self.name, key, v
+
+
+class Gauge:
+    """Point-in-time value, optionally per label set."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.values: Dict[LabelKey, float] = {}
+
+    def set(self, value: float, **labels: Any) -> None:
+        self.values[_labelkey(labels)] = float(value)
+
+    def samples(self) -> Iterable[Tuple[str, LabelKey, float]]:
+        for key, v in sorted(self.values.items()):
+            yield self.name, key, v
+
+
+class Histogram:
+    """Cumulative-bucket histogram (Prometheus semantics: le-bounded)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        self.name = name
+        self.help = help
+        self.buckets = tuple(sorted(buckets))
+        self.counts: Dict[LabelKey, List[int]] = {}
+        self.sums: Dict[LabelKey, float] = {}
+        self.totals: Dict[LabelKey, int] = {}
+
+    def observe(self, value: float, **labels: Any) -> None:
+        key = _labelkey(labels)
+        counts = self.counts.setdefault(key, [0] * len(self.buckets))
+        for i, le in enumerate(self.buckets):
+            if value <= le:
+                counts[i] += 1
+        self.sums[key] = self.sums.get(key, 0.0) + float(value)
+        self.totals[key] = self.totals.get(key, 0) + 1
+
+    def samples(self) -> Iterable[Tuple[str, LabelKey, float]]:
+        for key in sorted(self.totals):
+            for le, c in zip(self.buckets, self.counts[key]):
+                yield (f"{self.name}_bucket", key + (("le", repr(le)),),
+                       float(c))
+            yield (f"{self.name}_bucket", key + (("le", "+Inf"),),
+                   float(self.totals[key]))
+            yield f"{self.name}_sum", key, self.sums[key]
+            yield f"{self.name}_count", key, float(self.totals[key])
+
+
+class MetricsRegistry:
+    """Named metrics with get-or-create semantics and a fixed namespace."""
+
+    def __init__(self, namespace: str = "repro"):
+        self.namespace = namespace
+        self._metrics: Dict[str, Any] = {}
+
+    def _get(self, cls, name: str, help: str, **kw: Any):
+        metric = self._metrics.get(name)
+        if metric is None:
+            metric = cls(f"{self.namespace}_{name}", help=help, **kw)
+            self._metrics[name] = metric
+        elif not isinstance(metric, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{metric.kind}, not {cls.kind}")
+        return metric
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, help, buckets=buckets)
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._metrics))
+
+    # -- export -------------------------------------------------------------
+    def collect(self) -> List[Dict[str, Any]]:
+        """Flat sample list (the JSONL body)."""
+        out: List[Dict[str, Any]] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            for sample_name, key, value in m.samples():
+                out.append({"type": "sample", "name": sample_name,
+                            "kind": m.kind, "labels": dict(key),
+                            "value": value})
+        return out
+
+    def write_jsonl(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(json.dumps({"type": "meta",
+                                "schema": METRICS_SCHEMA_VERSION,
+                                "namespace": self.namespace}) + "\n")
+            for s in self.collect():
+                f.write(json.dumps(s, default=float) + "\n")
+        return path
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (0.0.4)."""
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if m.help:
+                lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            for sample_name, key, value in m.samples():
+                lines.append(f"{sample_name}{_labelstr(key)} {value}")
+        return "\n".join(lines) + "\n"
+
+    def __repr__(self) -> str:
+        return f"<MetricsRegistry {self.namespace!r} {len(self._metrics)} metrics>"
+
+
+# ---------------------------------------------------------------------------
+# The SuperstepRecord / cluster-stats mappings (snapshot-tested)
+# ---------------------------------------------------------------------------
+
+# SuperstepRecord fields that accumulate across supersteps → counters
+_RECORD_COUNTERS = ("events", "adds", "dels", "invalid_events",
+                    "stale_dropped", "dup_dropped", "new_placed",
+                    "migrations", "local_bytes", "remote_bytes",
+                    "halo_bytes", "collective_bytes")
+# instantaneous state → gauges
+_RECORD_GAUGES = ("superstep", "now", "backlog_adds", "backlog_dels",
+                  "cut_edges", "live_edges", "cut_ratio", "imbalance")
+# wall-clock phases → histograms
+_RECORD_HISTOGRAMS = ("ingest_seconds", "step_seconds", "compute_seconds")
+
+
+def record_superstep(reg: MetricsRegistry, record: Any,
+                     **labels: Any) -> None:
+    """Fold one ``SuperstepRecord`` into the registry (counters for the
+    accumulating fields, gauges for state, histograms for phase seconds)."""
+    for f in _RECORD_COUNTERS:
+        reg.counter(f"{f}_total").inc(getattr(record, f), **labels)
+    for f in _RECORD_GAUGES:
+        reg.gauge(f).set(getattr(record, f), **labels)
+    for f in _RECORD_HISTOGRAMS:
+        reg.histogram(f).observe(getattr(record, f), **labels)
+
+
+def record_cluster(reg: MetricsRegistry,
+                   stats: Optional[Dict[str, Any]]) -> None:
+    """Fold ``snapshot()["cluster"]`` into the registry with per-device
+    labels (None — the local backend — is a no-op)."""
+    if stats is None:
+        return
+    reg.gauge("cluster_devices").set(stats["devices"])
+    reg.gauge("cluster_halo_slots").set(stats["halo_slots"])
+    for dev, live in enumerate(stats["boundary_live_per_device"]):
+        reg.gauge("cluster_boundary_live").set(live, device=dev)
+    reg.gauge("cluster_halo_bytes_per_iter").set(
+        stats["halo_bytes_per_iter_per_device"])
+    reg.gauge("cluster_collective_bytes_per_iter").set(
+        stats["collective_bytes_per_iter_per_device"])
+    reg.gauge("cluster_iterations_total").set(stats["iterations_total"])
+    reg.gauge("cluster_halo_bytes_total").set(stats["halo_bytes_total"])
+    reg.gauge("cluster_collective_bytes_total").set(
+        stats["collective_bytes_total"])

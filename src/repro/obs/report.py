@@ -1,0 +1,117 @@
+"""Trace report CLI: ``python -m repro.obs.report <trace.jsonl>``.
+
+Summarises a span trace into a per-phase table (count, total, mean, share
+of traced wall time).  With two trace files it prints them side by side
+plus the per-phase ratio — the local-vs-sharded comparison the
+``bench_distributed_e2e`` deliverable is built on.  ``--json`` emits the
+same aggregation as machine-readable JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.obs.schema import validate_trace_file
+
+
+def summarize(events: List[Dict[str, Any]]) -> Dict[str, Dict[str, float]]:
+    """Per-span-name aggregation (mirrors ``Tracer.phase_totals``)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        if ev.get("type") != "span":
+            continue
+        row = out.setdefault(ev["name"],
+                             {"count": 0, "total_s": 0.0, "mean_s": 0.0})
+        row["count"] += 1
+        row["total_s"] += ev["dur_us"] / 1e6
+    for row in out.values():
+        row["mean_s"] = row["total_s"] / max(row["count"], 1)
+    return out
+
+
+def _top_level_total(events: List[Dict[str, Any]]) -> float:
+    """Sum of depth-0 spans — the traced wall time shares are against."""
+    return sum(ev["dur_us"] / 1e6 for ev in events
+               if ev.get("type") == "span" and ev.get("depth") == 0)
+
+
+def _fmt_s(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:8.3f}s"
+    return f"{v * 1e3:7.2f}ms"
+
+
+def render(summary: Dict[str, Dict[str, float]], wall_s: float,
+           label: str = "trace") -> str:
+    lines = [f"# {label}  (traced wall {wall_s:.3f}s)",
+             f"{'phase':<28} {'count':>6} {'total':>9} {'mean':>9} "
+             f"{'share':>6}"]
+    for name, row in sorted(summary.items(),
+                            key=lambda kv: -kv[1]["total_s"]):
+        share = row["total_s"] / wall_s * 100 if wall_s > 0 else 0.0
+        lines.append(f"{name:<28} {row['count']:>6d} "
+                     f"{_fmt_s(row['total_s'])} {_fmt_s(row['mean_s'])} "
+                     f"{share:5.1f}%")
+    return "\n".join(lines)
+
+
+def render_compare(a: Dict[str, Dict[str, float]], wall_a: float,
+                   b: Dict[str, Dict[str, float]], wall_b: float,
+                   label_a: str, label_b: str) -> str:
+    names = sorted(set(a) | set(b),
+                   key=lambda n: -(b.get(n, a.get(n))["total_s"]))
+    lines = [f"# {label_a} ({wall_a:.3f}s)  vs  {label_b} ({wall_b:.3f}s)"
+             f"  —  overall ×{wall_b / wall_a:.2f}" if wall_a > 0 else
+             f"# {label_a}  vs  {label_b}",
+             f"{'phase':<28} {label_a:>10} {label_b:>10} {'ratio':>7}"]
+    for name in names:
+        ta = a.get(name, {}).get("total_s", 0.0)
+        tb = b.get(name, {}).get("total_s", 0.0)
+        ratio = f"x{tb / ta:6.2f}" if ta > 0 else "     —"
+        lines.append(f"{name:<28} {_fmt_s(ta):>10} {_fmt_s(tb):>10} "
+                     f"{ratio:>7}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarise a repro trace JSONL into a per-phase table.")
+    p.add_argument("trace", help="trace JSONL file (Tracer.write_jsonl)")
+    p.add_argument("other", nargs="?", default=None,
+                   help="second trace to compare against (e.g. sharded)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the aggregation as JSON instead of a table")
+    args = p.parse_args(argv)
+
+    events = validate_trace_file(args.trace)
+    summary = summarize(events)
+    wall = _top_level_total(events)
+
+    if args.other is None:
+        if args.as_json:
+            print(json.dumps({"trace": args.trace, "wall_s": wall,
+                              "phases": summary}, indent=1))
+        else:
+            print(render(summary, wall, label=args.trace))
+        return 0
+
+    events_b = validate_trace_file(args.other)
+    summary_b = summarize(events_b)
+    wall_b = _top_level_total(events_b)
+    if args.as_json:
+        print(json.dumps({
+            "a": {"trace": args.trace, "wall_s": wall, "phases": summary},
+            "b": {"trace": args.other, "wall_s": wall_b,
+                  "phases": summary_b},
+        }, indent=1))
+    else:
+        print(render_compare(summary, wall, summary_b, wall_b,
+                             label_a=args.trace, label_b=args.other))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,133 @@
+"""Schema validation for the observability file formats (DESIGN.md §11).
+
+The trace and metrics JSONL files are contracts: the report CLI, the CI
+smoke job, and any external consumer parse them blind.  These validators
+are deliberately hand-rolled (no jsonschema dependency) and strict about
+the fields the consumers rely on, so an exporter drift fails the schema
+tests loudly instead of silently producing unreadable artifacts.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from repro.obs.metrics import METRICS_SCHEMA_VERSION
+from repro.obs.trace import TRACE_SCHEMA_VERSION
+
+
+class SchemaError(ValueError):
+    """A trace/metrics line violated the published schema."""
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SchemaError(msg)
+
+
+def _num(d: Dict[str, Any], key: str, line: int) -> None:
+    _require(isinstance(d.get(key), (int, float))
+             and not isinstance(d.get(key), bool),
+             f"line {line}: {key!r} must be a number, got {d.get(key)!r}")
+
+
+# ---------------------------------------------------------------------------
+# trace JSONL
+# ---------------------------------------------------------------------------
+
+def validate_trace_line(obj: Dict[str, Any], line: int = 0) -> None:
+    """One trace event (post-header).  Raises SchemaError on violation."""
+    _require(isinstance(obj, dict), f"line {line}: not an object")
+    kind = obj.get("type")
+    if kind == "span":
+        _require(isinstance(obj.get("name"), str) and obj["name"],
+                 f"line {line}: span needs a non-empty name")
+        _num(obj, "ts_us", line)
+        _num(obj, "dur_us", line)
+        _require(obj["dur_us"] >= 0, f"line {line}: negative dur_us")
+        _num(obj, "depth", line)
+        _require(obj["depth"] >= 0, f"line {line}: negative depth")
+        if "attrs" in obj:
+            _require(isinstance(obj["attrs"], dict),
+                     f"line {line}: attrs must be an object")
+    elif kind == "counter":
+        _require(isinstance(obj.get("name"), str) and obj["name"],
+                 f"line {line}: counter needs a non-empty name")
+        _num(obj, "ts_us", line)
+        _num(obj, "value", line)
+    else:
+        raise SchemaError(f"line {line}: unknown event type {kind!r}")
+
+
+def validate_trace_header(obj: Dict[str, Any]) -> None:
+    _require(isinstance(obj, dict) and obj.get("type") == "meta",
+             "first line must be a meta header")
+    _require(obj.get("schema") == TRACE_SCHEMA_VERSION,
+             f"trace schema {obj.get('schema')!r}, "
+             f"expected {TRACE_SCHEMA_VERSION}")
+    _require(obj.get("clock") == "perf_counter_ns",
+             f"unknown clock {obj.get('clock')!r}")
+    _require(obj.get("unit") == "us", f"unknown unit {obj.get('unit')!r}")
+
+
+def validate_trace_file(path: str) -> List[Dict[str, Any]]:
+    """Validate a trace JSONL file; returns the parsed events (header
+    excluded) so callers can validate *and* consume in one pass."""
+    events: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for i, raw in enumerate(f):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                obj = json.loads(raw)
+            except json.JSONDecodeError as e:
+                raise SchemaError(f"line {i}: invalid JSON: {e}") from e
+            if i == 0:
+                validate_trace_header(obj)
+                continue
+            validate_trace_line(obj, line=i)
+            events.append(obj)
+    return events
+
+
+# ---------------------------------------------------------------------------
+# metrics JSONL
+# ---------------------------------------------------------------------------
+
+_METRIC_KINDS = ("counter", "gauge", "histogram")
+
+
+def validate_metrics_line(obj: Dict[str, Any], line: int = 0) -> None:
+    _require(isinstance(obj, dict), f"line {line}: not an object")
+    _require(obj.get("type") == "sample",
+             f"line {line}: expected type 'sample', got {obj.get('type')!r}")
+    _require(isinstance(obj.get("name"), str) and obj["name"],
+             f"line {line}: sample needs a non-empty name")
+    _require(obj.get("kind") in _METRIC_KINDS,
+             f"line {line}: unknown metric kind {obj.get('kind')!r}")
+    _require(isinstance(obj.get("labels"), dict),
+             f"line {line}: labels must be an object")
+    _num(obj, "value", line)
+
+
+def validate_metrics_file(path: str) -> List[Dict[str, Any]]:
+    samples: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for i, raw in enumerate(f):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                obj = json.loads(raw)
+            except json.JSONDecodeError as e:
+                raise SchemaError(f"line {i}: invalid JSON: {e}") from e
+            if i == 0:
+                _require(obj.get("type") == "meta",
+                         "first line must be a meta header")
+                _require(obj.get("schema") == METRICS_SCHEMA_VERSION,
+                         f"metrics schema {obj.get('schema')!r}, "
+                         f"expected {METRICS_SCHEMA_VERSION}")
+                continue
+            validate_metrics_line(obj, line=i)
+            samples.append(obj)
+    return samples

@@ -4,10 +4,17 @@ A scaled-down vLLM-style loop: requests enter a queue, join the running
 batch at free slots, decode one token per engine step for every active slot,
 and leave on EOS/max-len. Slot state (cache rows) is reused in place; the
 decode step itself is the jit'd ``serve_step`` the dry-run lowers.
+
+The engine feeds the observability layer's ``MetricsRegistry``
+(DESIGN.md §11): request/token/completion counters, queue-depth and
+active-slot gauges, and a step-latency histogram — ``engine.metrics``
+exports as JSONL or Prometheus text (the scrape-endpoint body).  Pass an
+existing registry to share one across engines; the default builds its own.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
@@ -16,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import TransformerConfig, decode_step, init_cache, prefill
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -36,7 +44,8 @@ class ServeEngine:
     """Fixed-slot continuous batching (B slots, shared position clock)."""
 
     def __init__(self, params: Any, cfg: TransformerConfig, batch_slots: int,
-                 max_seq: int, greedy: bool = True):
+                 max_seq: int, greedy: bool = True,
+                 metrics: Optional[MetricsRegistry] = None):
         self.params = params
         self.cfg = cfg
         self.b = batch_slots
@@ -53,9 +62,14 @@ class ServeEngine:
         self._step = jax.jit(
             lambda p, t, c, i: decode_step(p, t, c, i, cfg))
         self.clock = 0                         # global position index
+        self.metrics = metrics if metrics is not None \
+            else MetricsRegistry(namespace="serve")
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        self.metrics.counter("requests_total",
+                             "requests submitted to the engine").inc()
+        self.metrics.gauge("queue_depth").set(len(self.queue))
 
     def _admit(self) -> None:
         for slot in range(self.b):
@@ -78,10 +92,17 @@ class ServeEngine:
     def step(self) -> List[Completion]:
         """One engine iteration: admit, decode one token for all active slots."""
         self._admit()
+        self.metrics.gauge("queue_depth").set(len(self.queue))
+        self.metrics.gauge("active_slots").set(int(self.active.sum()))
         if not self.active.any():
             return []
+        t0 = time.perf_counter()
         logits, self.cache = self._step(self.params, self.tokens, self.cache,
                                         jnp.int32(self.clock))
+        jax.block_until_ready(logits)          # latency, not dispatch time
+        self.metrics.histogram("step_seconds",
+                               "decode-step latency").observe(
+            time.perf_counter() - t0)
         self.clock += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)).astype(np.int32)
         done: List[Completion] = []
@@ -93,10 +114,14 @@ class ServeEngine:
             self.outputs[self.uid[slot]].append(tok)
             self.budget[slot] -= 1
             new_tokens[slot, 0] = tok
+            self.metrics.counter("tokens_decoded_total",
+                                 "tokens decoded across all slots").inc()
             if self.budget[slot] <= 0 or self.clock >= self.max_seq - 1:
                 done.append(Completion(int(self.uid[slot]),
                                        self.outputs.pop(int(self.uid[slot]))))
                 self.active[slot] = False
+                self.metrics.counter("completions_total",
+                                     "requests completed").inc()
         self.tokens = jnp.asarray(new_tokens)
         return done
 
