@@ -47,7 +47,7 @@ from repro.api.config import ClusterSection
 from repro.api.strategy import StrategyContext
 from repro.core.distributed import (BlockLayout, DistGraph,
                                     build_cluster_graph, comm_model,
-                                    make_cluster_migrator)
+                                    layout_device_arrays, make_cluster_step)
 from repro.core.migration import MigrationStats, flush_pending
 from repro.core.partition_state import PartitionState
 from repro.core.repartitioner import History
@@ -128,7 +128,30 @@ def resolve_execution_backend(spec: Any,
     return spec
 
 
-_ZERO_COMM = {"halo_bytes": 0, "collective_bytes": 0}
+_ZERO_COMM = {"halo_bytes": 0, "halo_live_bytes": 0, "collective_bytes": 0}
+
+
+def _graph_fingerprint(graph: Graph) -> Tuple[int, ...]:
+    """Cheap content fingerprint of a ``Graph``'s live topology.
+
+    Object identity is not enough to decide whether the device bucketing is
+    stale: a caller can mutate a numpy-backed ``Graph`` in place, and the
+    streaming path hands over a *new* object every superstep even when the
+    delta was empty. An order-sensitive polynomial hash over the live edge
+    endpoints and live node ids (int64, wraparound) catches both — O(E)
+    numpy, far below the bucketing cost it gates.
+    """
+    nm = np.asarray(graph.node_mask)
+    em = np.asarray(graph.edge_mask)
+    s = np.asarray(graph.src)[em].astype(np.int64)
+    d = np.asarray(graph.dst)[em].astype(np.int64)
+    ei = np.flatnonzero(em).astype(np.int64)
+    ni = np.flatnonzero(nm).astype(np.int64)
+    with np.errstate(over="ignore"):
+        h_edges = int(((s * 0x9E3779B1 + d * 0x85EBCA77)
+                       * (ei + 0xC2B2AE3D)).sum()) & (2 ** 63 - 1)
+        h_nodes = int((ni * 0x27D4EB2F + 1).sum()) & (2 ** 63 - 1)
+    return (nm.shape[0], int(nm.sum()), int(em.sum()), h_edges, h_nodes)
 
 
 @register_execution_backend("local")
@@ -176,10 +199,14 @@ class ShardedBackend:
 
     The session keeps its canonical arrays in slot order; this backend
     buckets the graph into device blocks (``build_cluster_graph``, rebuilt
-    whenever the graph object changes — once per streaming superstep, once
-    per batch call), runs the parity migrator under ``shard_map``, and maps
-    assignments back. Strategies with ``adapts=False`` fall through to
-    their local hooks (there is nothing to distribute).
+    only when the graph's content fingerprint changes, with padded bucket
+    shapes that survive streaming growth), runs the parity migrator under
+    ``shard_map``, and maps assignments back. Compiled steps take the
+    bucketing as jit *arguments* and are cached per shape signature, so a
+    shape-stable rebuild costs zero recompiles — the ``cluster/recompile``
+    span fires only on genuine shape growth. Strategies with
+    ``adapts=False`` fall through to their local hooks (there is nothing
+    to distribute).
 
     Decision parity with the local path is exact — same RNG draws, same
     quota order — so ``distribute()``/``gather()`` can move a session
@@ -196,10 +223,15 @@ class ShardedBackend:
         self._mesh: Optional[jax.sharding.Mesh] = None
         self._mesh_devices = 0
         self._graph_ref: Optional[Graph] = None
+        self._graph_fp: Optional[Tuple[int, ...]] = None
         self._dg: Optional[DistGraph] = None
         self._layout: Optional[BlockLayout] = None
         self._comm: Optional[Dict[str, Any]] = None
-        self._migrators: Dict[Tuple[float, str], Any] = {}
+        self._mig_args: Optional[Tuple[Any, ...]] = None
+        # compiled cluster steps keyed by shape signature
+        # (P, n_blk, B, E, n_cap, k, tie_break): a streaming rebuild whose
+        # padded bucket shapes hold dispatches into the cached executable
+        self._migrators: Dict[Tuple[Any, ...], Any] = {}
         self._probed = False
         self._superstep_comm = dict(_ZERO_COMM)
         self._total_comm = dict(_ZERO_COMM)
@@ -226,7 +258,9 @@ class ShardedBackend:
         self._mesh = None
         self._mesh_devices = 0
         self._graph_ref = None
+        self._graph_fp = None
         self._dg = self._layout = self._comm = None
+        self._mig_args = None
         self._migrators.clear()
         self._probed = False
 
@@ -237,32 +271,102 @@ class ShardedBackend:
             devs = np.asarray(jax.devices()[:P])
             self._mesh = jax.sharding.Mesh(devs, (self.cluster.axis,))
             self._mesh_devices = P
-            self._graph_ref = None            # block size may change with P
-        if self._graph_ref is not graph:
-            # host-side bucketing: a prime suspect for the sharded slowdown
-            # (runs every streaming superstep), hence its own span
-            with self.tracer.span("cluster/bucket", devices=P) as sp:
-                self._dg, self._layout = build_cluster_graph(
-                    graph, np.asarray(state.assignment), P,
-                    halo_pad=self.cluster.halo_pad)
-                self._comm = comm_model(self._dg, ctx.k)
-                sp.set(halo_slots=self._dg.halo_size,
-                       block=self._dg.block_size)
+            # block shapes and compiled executables are mesh-bound
+            self._graph_ref = None
+            self._graph_fp = None
+            self._dg = self._layout = self._comm = None
+            self._mig_args = None
             self._migrators.clear()
+        fp = _graph_fingerprint(graph)
+        if self._dg is not None and fp == self._graph_fp:
+            # same live topology (identical object, an in-place no-op, or a
+            # quiet streaming superstep): the bucketing is still valid
             self._graph_ref = graph
+            return
+        # host-side bucketing (runs on every topology change); previous
+        # shapes are passed as floors so a rebuild keeps them unless the
+        # graph genuinely outgrew a bucket — the compiled step stays hot
+        with self.tracer.span("cluster/bucket", devices=P) as sp:
+            if self._dg is None:
+                floors = {}
+            else:
+                floors = {"min_block": self._dg.block_size,
+                          "min_edges": int(self._dg.src_owner.shape[1]),
+                          "min_halo": self._dg.halo_size}
+            dg, self._layout = build_cluster_graph(
+                graph, np.asarray(state.assignment), P,
+                halo_pad=self.cluster.halo_pad,
+                block_pad=self.cluster.block_pad,
+                edge_pad=self.cluster.edge_pad, **floors)
+            self._comm = comm_model(dg, ctx.k)
+            # pin device placement once per rebuild: every dispatch then
+            # sees identically-sharded avals (stable jit cache key)
+            shard = jax.sharding.NamedSharding(
+                self._mesh, jax.sharding.PartitionSpec(self.cluster.axis))
+            repl = jax.sharding.NamedSharding(
+                self._mesh, jax.sharding.PartitionSpec())
+            self._dg = jax.device_put(dg, shard)
+            blk_live, orig, ng_safe, slot_live = layout_device_arrays(
+                self._layout)
+            self._mig_args = (self._dg,
+                              jax.device_put(blk_live, shard),
+                              jax.device_put(orig, shard),
+                              jax.device_put(ng_safe, repl),
+                              jax.device_put(slot_live, repl))
+            sp.set(halo_slots=self._dg.halo_size,
+                   block=self._dg.block_size)
+        self._graph_ref = graph
+        self._graph_fp = fp
 
     def _charge(self, iters: int = 1) -> None:
         c = self._comm
         P = c["devices"]
         halo = iters * P * c["halo_bytes_per_device"]
+        live = iters * P * c["halo_live_bytes_per_device"]
         coll = iters * P * c["collective_bytes_per_device"]
         for acc in (self._superstep_comm, self._total_comm):
             acc["halo_bytes"] += halo
+            acc["halo_live_bytes"] += live
             acc["collective_bytes"] += coll
         self._total_iterations += iters
 
+    def _sig(self, ctx: StrategyContext) -> Tuple[Any, ...]:
+        """Shape signature a compiled cluster step is keyed by."""
+        dg = self._dg
+        return (dg.num_devices, dg.block_size, dg.halo_size,
+                int(dg.src_owner.shape[1]), self._layout.n_cap,
+                ctx.k, ctx.tie_break)
+
+    def _migrator(self, ctx: StrategyContext,
+                  state: Optional[PartitionState] = None):
+        """The compiled step for the current shapes — built (and, given a
+        state, compile-warmed) at most once per shape signature. The
+        ``cluster/recompile`` span fires only here: on first use and on
+        genuine shape growth past the padded buckets, never on a
+        shape-stable streaming rebuild."""
+        key = self._sig(ctx)
+        mig = self._migrators.get(key)
+        if mig is None:
+            with self.tracer.span("cluster/recompile", devices=key[0],
+                                  block=key[1], halo_slots=key[2],
+                                  edge_bucket=key[3], n_cap=key[4]) as sp:
+                mig = make_cluster_step(self._mesh, k=ctx.k,
+                                        n_cap=self._layout.n_cap,
+                                        tie_break=ctx.tie_break,
+                                        axis=self.cluster.axis)
+                if state is not None:
+                    # warm the executable inside the span (pure: the result
+                    # is discarded, no comm is charged) so the span, not the
+                    # first dispatch, carries the compile cost
+                    out = mig(state.assignment, state.pending, state.rng,
+                              state.capacity, ctx.s, *self._mig_args)
+                    sp.fence(out[0])
+            self._migrators[key] = mig
+        return mig
+
     def _step_fn(self, graph: Graph, ctx: StrategyContext,
-                 unshard_each: bool = False):
+                 unshard_each: bool = False,
+                 state: Optional[PartitionState] = None):
         """state -> (state, MigrationStats) over the cluster engine, in the
         session's canonical slot order (plugs into the shared drivers).
         The migrator handles the slot↔block permutation on device, so one
@@ -273,18 +377,14 @@ class ShardedBackend:
         jits (cut history, flush) that must not see this mesh's sharding.
         The streaming ``adapt`` loop keeps the state mesh-resident instead
         and unshards once at the end."""
-        key = (ctx.s, ctx.tie_break)
-        mig = self._migrators.get(key)
-        if mig is None:
-            mig = make_cluster_migrator(self._mesh, self._dg, self._layout,
-                                        ctx.k, s=ctx.s,
-                                        tie_break=ctx.tie_break,
-                                        axis=self.cluster.axis)
-            self._migrators[key] = mig
+        mig = self._migrator(ctx, state)
+        mig_args = self._mig_args
+        s = ctx.s
 
         def step(state: PartitionState):
             a, p, rng, (committed, willing, admitted) = mig(
-                state.assignment, state.pending, state.rng, state.capacity)
+                state.assignment, state.pending, state.rng, state.capacity,
+                s, *mig_args)
             self._charge(1)
             new_state = PartitionState(
                 assignment=a, pending=p, capacity=state.capacity, rng=rng,
@@ -368,6 +468,7 @@ class ShardedBackend:
                 best = min(best, time.perf_counter() - t0)
             return best
 
+        iters_before = self._total_iterations
         with self.tracer.span("obs/comm_probe", devices=P):
             flat = jnp.zeros((P * n_blk,), jnp.int32)
             t_null = best_of(null_probe, flat)
@@ -375,16 +476,17 @@ class ShardedBackend:
             raw_quota = best_of(quota_probe, flat)
             t_halo = max(raw_halo - t_null, 0.0)
             t_quota = max(raw_quota - t_null, 0.0)
-            mig_step = self._step_fn(self._graph_ref, ctx)
+            mig_step = self._step_fn(self._graph_ref, ctx, state=state)
 
             def full_iter():
                 s2, _ = mig_step(state)             # pure: result discarded
                 return s2.assignment
 
             t_full = best_of(full_iter)
-        # the extra _charge() calls from probe iterations are rolled back —
-        # the probe must not inflate the session's comm telemetry
-        self._charge(-(1 + 3))
+        # the probe's _charge() calls are rolled back exactly (counted, not
+        # hard-coded to best_of's rep count) — the probe must not inflate
+        # the session's comm telemetry
+        self._charge(-(self._total_iterations - iters_before))
         residual = max(t_full - t_null - t_halo - t_quota, 0.0)
         tr = self.tracer
         tr.add_span("comm/halo_exchange", t_halo, probed=True,
@@ -400,8 +502,8 @@ class ShardedBackend:
         if not getattr(strategy, "adapts", False):
             return strategy.adapt(graph, state, ctx)
         self._ensure(graph, state, ctx)
-        first = (ctx.s, ctx.tie_break) not in self._migrators
-        step = self._step_fn(graph, ctx)
+        first = self._sig(ctx) not in self._migrators
+        step = self._step_fn(graph, ctx, state=state)
         tr = self.tracer
         if tr.enabled and self.comm_probe and not self._probed:
             self._probed = True
@@ -427,17 +529,18 @@ class ShardedBackend:
             graph, state, s=ctx.s, patience=ctx.patience,
             max_iters=ctx.max_iters, tie_break=ctx.tie_break,
             rel_tol=ctx.rel_tol, record_history=ctx.record_history,
-            step_fn=self._step_fn(graph, ctx, unshard_each=True))
+            step_fn=self._step_fn(graph, ctx, unshard_each=True,
+                                  state=state))
         return state, hist
 
     def adapt_rounds(self, strategy, graph, state, iters, ctx):
         if not getattr(strategy, "adapts", False):
             return strategy.adapt_rounds(graph, state, iters, ctx)
         self._ensure(graph, state, ctx)
-        state, hist = _adapt_rounds(graph, state, iters,
-                                    record_history=ctx.record_history,
-                                    step_fn=self._step_fn(graph, ctx,
-                                                          unshard_each=True))
+        state, hist = _adapt_rounds(
+            graph, state, iters, record_history=ctx.record_history,
+            step_fn=self._step_fn(graph, ctx, unshard_each=True,
+                                  state=state))
         return state, hist
 
     # -- telemetry ----------------------------------------------------------
@@ -460,8 +563,10 @@ class ShardedBackend:
             "collective_bytes_per_iter_per_device":
                 c["collective_bytes_per_device"],
             "halo_bytes_total": self._total_comm["halo_bytes"],
+            "halo_live_bytes_total": self._total_comm["halo_live_bytes"],
             "collective_bytes_total": self._total_comm["collective_bytes"],
             "iterations_total": self._total_iterations,
+            "compiled_steps": len(self._migrators),
         }
 
     def __repr__(self) -> str:

@@ -110,12 +110,27 @@ class ClusterSection:
                                    # partition per device)
     halo_pad: float = 0.0          # halo padding policy: fractional head-room
                                    # over the largest boundary segment
+    block_pad: float = 0.25        # node-block growth policy: head-room added
+                                   # when the largest partition outgrows the
+                                   # current block (0 = exact fit every rebuild)
+    edge_pad: float = 0.25         # edge-bucket growth policy: head-room added
+                                   # when the largest per-device edge bucket
+                                   # outgrows the current padded size
+    # block_pad/edge_pad (with the halo's halo_pad) keep consecutive
+    # streaming rebuilds shape-stable so the compiled cluster step is
+    # reused instead of re-jitted per superstep (DESIGN.md §10)
 
     def __post_init__(self):
         # fail at the knob, not with a broadcast error deep in the bucketing
         if self.halo_pad < 0:
             raise ValueError(f"cluster.halo_pad must be >= 0 (head-room over "
                              f"the largest boundary), got {self.halo_pad}")
+        if self.block_pad < 0:
+            raise ValueError(f"cluster.block_pad must be >= 0 (head-room over "
+                             f"the largest partition), got {self.block_pad}")
+        if self.edge_pad < 0:
+            raise ValueError(f"cluster.edge_pad must be >= 0 (head-room over "
+                             f"the largest edge bucket), got {self.edge_pad}")
         if self.devices < 0:
             raise ValueError(f"cluster.devices must be >= 0 (0 = one device "
                              f"per partition), got {self.devices}")

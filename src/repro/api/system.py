@@ -402,6 +402,7 @@ class DynamicGraphSystem:
             local_bytes=local_bytes, remote_bytes=remote_bytes,
             compute_seconds=compute_seconds,
             halo_bytes=comm["halo_bytes"],
+            halo_live_bytes=comm.get("halo_live_bytes", 0),
             collective_bytes=comm["collective_bytes"],
         )
         self.telemetry.append(record)
@@ -793,6 +794,7 @@ class DynamicGraphSystem:
             "supersteps": len(recs),
             "events": int(sum(r.events for r in recs)),
             "halo_bytes": int(sum(r.halo_bytes for r in recs)),
+            "halo_live_bytes": int(sum(r.halo_live_bytes for r in recs)),
             "collective_bytes": int(sum(r.collective_bytes for r in recs)),
             "cut_final": float(recs[-1].cut_ratio),
             "cut_mean": float(np.mean([r.cut_ratio for r in recs])),

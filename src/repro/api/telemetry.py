@@ -39,6 +39,9 @@ class SuperstepRecord:
     compute_seconds: float = 0.0  # vertex-program superstep wall clock
     halo_bytes: int = 0        # sharded backend: halo bytes received this
                                # superstep, summed over devices (0 on local)
+    halo_live_bytes: int = 0   # live (unpadded) fraction of the halo — the
+                               # cut frontier the heuristic shrinks; the
+                               # padded halo_bytes is shape-stable by design
     collective_bytes: int = 0  # sharded backend: capacity-psum + rank-gather
                                # bytes, summed over devices (0 on local)
 

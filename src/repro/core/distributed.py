@@ -42,6 +42,12 @@ import numpy as np
 from repro.compat import axis_size, shard_map
 from repro.graph.structure import Graph
 
+# Trace-time counters: bumped inside jitted function *bodies*, so they count
+# traces (→ compiles), not calls. The compile-cache tests assert on these;
+# the sharded backend's whole performance story is that after warmup these
+# stop moving (DESIGN.md §10).
+TRACE_COUNTS = {"cluster_step": 0}
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -115,19 +121,43 @@ def build_dist_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
     return dg, layout.perm
 
 
+def _grow(need: int, floor: int, pad: float) -> int:
+    """Padded-bucket growth policy (DESIGN.md §10).
+
+    Reuse the previous size while the need fits (shape-stable: the jit
+    executable keyed on it stays valid); on genuine growth jump by a
+    fractional head-room so the next few supersteps fit too — O(log) shape
+    buckets over a stream instead of one per superstep.
+    """
+    if need <= floor:
+        return floor
+    return max(need, int(np.ceil(need * (1.0 + pad))))
+
+
 def build_cluster_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
                         *, block_size: Optional[int] = None,
                         halo_pad: float = 0.0,
+                        block_pad: float = 0.0, edge_pad: float = 0.0,
+                        min_block: int = 0, min_edges: int = 0,
+                        min_halo: int = 0,
                         ) -> Tuple[DistGraph, "BlockLayout"]:
     """Bucketing + halo build behind the backend interface.
 
     ``halo_pad`` is the halo padding policy: fractional head-room added on
     top of the largest boundary segment, so that all devices exchange the
     same (padded) halo volume and a later engine could grow boundaries
-    without an immediate rebuild.
+    without an immediate rebuild. ``block_pad`` / ``edge_pad`` are the
+    sibling policies for the node-block and edge-bucket dimensions, and the
+    ``min_*`` floors carry the previous build's shapes so a streaming
+    rebuild keeps them unless the graph genuinely outgrew them — shape
+    stability is what lets the backend reuse one compiled step across
+    rebuilds instead of re-jitting every superstep.
     """
     if halo_pad < 0:
         raise ValueError(f"halo_pad must be >= 0, got {halo_pad}")
+    if block_pad < 0 or edge_pad < 0:
+        raise ValueError(f"block_pad/edge_pad must be >= 0, got "
+                         f"{block_pad}/{edge_pad}")
     P = num_devices
     assignment = np.asarray(assignment)
     node_mask = np.asarray(graph.node_mask)
@@ -136,24 +166,26 @@ def build_cluster_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
     # --- permute nodes into partition blocks (stable: live first) --------
     order = np.lexsort((np.arange(n_cap), ~node_mask, assignment))
     perm = order                                   # new slot -> old id
-    inv = np.empty(n_cap, dtype=np.int64)
-    inv[order] = np.arange(n_cap)
     counts = np.bincount(assignment[node_mask], minlength=P)
-    n_blk = int(block_size) if block_size else int(max(1, counts.max()))
-    # per-partition compaction: slot within block
-    # recompute: for each partition, its nodes (live) get slots 0..c-1
-    new_global = np.full(n_cap, -1, dtype=np.int64)
-    start = 0
-    starts = {}
-    sorted_assign = assignment[order]
+    if block_size:
+        n_blk = int(block_size)
+    else:
+        n_blk = _grow(int(max(1, counts.max())), min_block, block_pad)
+    over = np.flatnonzero(counts > n_blk)
+    if over.size:
+        p = int(over[0])
+        raise ValueError(f"partition {p} has {counts[p]} nodes > block {n_blk}")
+    # per-partition compaction: slot within block — the lexsort already
+    # groups each partition's live nodes contiguously in original-id order,
+    # so a searchsorted over the sorted labels yields every in-block slot
     sorted_live = node_mask[order]
-    pos_in_part = np.zeros(n_cap, dtype=np.int64)
-    for p in range(P):
-        sel = np.flatnonzero((sorted_assign == p) & sorted_live)
-        if sel.size > n_blk:
-            raise ValueError(f"partition {p} has {sel.size} nodes > block {n_blk}")
-        ids = order[sel]
-        new_global[ids] = p * n_blk + np.arange(sel.size)
+    live_pos = np.flatnonzero(sorted_live)
+    lab_live = assignment[order][live_pos]          # non-decreasing
+    ids_live = order[live_pos]
+    p_starts = np.searchsorted(lab_live, np.arange(P))
+    new_global = np.full(n_cap, -1, dtype=np.int64)
+    new_global[ids_live] = (lab_live * n_blk
+                            + np.arange(live_pos.size) - p_starts[lab_live])
     live_ids = np.flatnonzero(node_mask)
     assert (new_global[live_ids] >= 0).all()
 
@@ -169,45 +201,46 @@ def build_cluster_graph(graph: Graph, assignment: np.ndarray, num_devices: int,
     dst_dev, dst_off = gd // n_blk, gd % n_blk
 
     # --- boundary sets: local slots referenced by remote edges ------------
-    boundary_sets = [np.unique(src_off[(src_dev == p) & (dst_dev != p)])
-                     for p in range(P)]
-    b_max = int(max((b.size for b in boundary_sets), default=1))
-    B = max(1, int(np.ceil(b_max * (1.0 + halo_pad))))
+    # one sorted unique over packed (dev, off) keys replaces the per-device
+    # set builds + the (dev, off) -> halo-index dict
+    cut = src_dev != dst_dev
+    b_uniq = np.unique(src_dev[cut] * n_blk + src_off[cut])   # sorted keys
+    b_dev = b_uniq // n_blk
+    b_counts = np.bincount(b_dev, minlength=P) if P else np.zeros(0, np.int64)
+    b_starts = np.searchsorted(b_dev, np.arange(P))
+    b_max = int(b_counts.max()) if P else 1
+    B = _grow(max(1, b_max), min_halo, halo_pad)
     boundary = np.zeros((P, B), dtype=np.int32)
     boundary_ok = np.zeros((P, B), dtype=bool)
-    halo_slot = {}                                  # (dev, off) -> halo idx
-    for p in range(P):
-        bs = boundary_sets[p]
-        boundary[p, : bs.size] = bs
-        boundary_ok[p, : bs.size] = True
-        for i, off in enumerate(bs):
-            halo_slot[(p, int(off))] = i
+    b_pos = np.arange(b_uniq.size) - b_starts[b_dev]
+    boundary[b_dev, b_pos] = b_uniq % n_blk
+    boundary_ok[b_dev, b_pos] = True
 
     # --- bucket edges by destination device --------------------------------
-    E = int(max(1, max((int((dst_dev == p).sum()) for p in range(P)), default=1)))
+    e_counts = np.bincount(dst_dev, minlength=P) if P else np.zeros(0, np.int64)
+    E = _grow(int(max(1, e_counts.max())) if P else 1, min_edges, edge_pad)
     src_owner = np.zeros((P, E), dtype=np.int32)
     src_slot = np.zeros((P, E), dtype=np.int32)
     src_local = np.zeros((P, E), dtype=bool)
     dst_local = np.zeros((P, E), dtype=np.int32)
     edge_ok = np.zeros((P, E), dtype=bool)
-    for p in range(P):
-        sel = np.flatnonzero(dst_dev == p)
-        m = sel.size
-        src_owner[p, :m] = src_dev[sel]
-        dst_local[p, :m] = dst_off[sel]
-        edge_ok[p, :m] = True
-        loc = src_dev[sel] == p
-        src_local[p, :m] = loc
-        ss = np.empty(m, dtype=np.int32)
-        ss[loc] = src_off[sel][loc]
-        rem = ~loc
-        ss[rem] = [halo_slot[(int(a), int(b))]
-                   for a, b in zip(src_dev[sel][rem], src_off[sel][rem])]
-        src_slot[p, :m] = ss
+    # stable sort keeps each bucket in original edge order, matching the
+    # per-device flatnonzero scan this replaces bit for bit
+    e_order = np.argsort(dst_dev, kind="stable")
+    e_dev = dst_dev[e_order]
+    e_pos = np.arange(e_order.size) - np.searchsorted(e_dev, np.arange(P))[e_dev]
+    loc = (src_dev == dst_dev)[e_order]
+    # halo index of a remote source = rank of its packed key within its
+    # owner's boundary set (valid only where ~loc; masked by the where)
+    halo_of = (np.searchsorted(b_uniq, (src_dev * n_blk + src_off)[e_order])
+               - b_starts[src_dev[e_order]])
+    src_owner[e_dev, e_pos] = src_dev[e_order]
+    src_slot[e_dev, e_pos] = np.where(loc, src_off[e_order], halo_of)
+    src_local[e_dev, e_pos] = loc
+    dst_local[e_dev, e_pos] = dst_off[e_order]
+    edge_ok[e_dev, e_pos] = True
 
-    node_ok = np.zeros((P, n_blk), dtype=bool)
-    for p in range(P):
-        node_ok[p, : counts[p]] = True
+    node_ok = np.arange(n_blk)[None, :] < counts[:, None]
 
     dg = DistGraph(
         src_owner=jnp.asarray(src_owner), src_slot=jnp.asarray(src_slot),
@@ -297,9 +330,9 @@ def migrate_step_shard(assignment_blk: jax.Array, pending_blk: jax.Array,
     node_ok = dg_local.node_ok[0]
     # COMMIT
     assignment_blk = jnp.where(pending_blk >= 0, pending_blk, assignment_blk)
-    # label halo exchange (labels as 1-d features)
-    lab = assignment_blk[:, None].astype(jnp.float32)
-    halo = _halo_exchange(lab, dg_local)[:, 0].astype(jnp.int32)
+    # label halo exchange (int32 labels travel as-is: no float32 round-trip,
+    # precision-safe for label spaces beyond 2^24)
+    halo = _halo_exchange(assignment_blk[:, None], dg_local)[:, 0]
     src_owner = dg_local.src_owner[0]
     src_slot = dg_local.src_slot[0]
     src_is_local = dg_local.src_local[0]
@@ -412,8 +445,8 @@ def cluster_migrate_shard(assignment_blk: jax.Array, pending_blk: jax.Array,
         jnp.sum(has_pending & node_ok).astype(jnp.int32), axis)
 
     # ---- 2. SCORE: neighbour-label histogram via the label halo ----------
-    lab_feat = assignment_blk[:, None].astype(jnp.float32)
-    halo = _halo_exchange(lab_feat, dg_local, axis)[:, 0].astype(jnp.int32)
+    # int32 labels exchanged directly (no float32 round-trip on the hot path)
+    halo = _halo_exchange(assignment_blk[:, None], dg_local, axis)[:, 0]
     src_owner = dg_local.src_owner[0]
     src_slot = dg_local.src_slot[0]
     src_is_local = dg_local.src_local[0]
@@ -471,43 +504,65 @@ def cluster_migrate_shard(assignment_blk: jax.Array, pending_blk: jax.Array,
     return assignment_blk, pending, committed, n_willing, n_admitted
 
 
-def make_cluster_migrator(mesh: jax.sharding.Mesh, dg: DistGraph,
-                          layout: BlockLayout, k: int, *, s: float = 0.5,
-                          tie_break: str = "random", axis: str = AXIS):
+def layout_device_arrays(layout: BlockLayout
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                    jax.Array]:
+    """The four scatter/gather arrays a cluster step consumes, as device
+    arrays: ``(blk_live, orig, ng_safe, slot_live)``. They are jit
+    *arguments* of ``make_cluster_step`` (not closure constants), so a
+    rebuilt layout with the same shapes reuses the compiled executable.
+    """
+    blk_live = jnp.asarray(layout.orig_id >= 0)
+    orig = jnp.asarray(np.maximum(layout.orig_id, 0), jnp.int32)
+    slot_live = jnp.asarray(layout.new_global >= 0)
+    ng_safe = jnp.asarray(
+        np.clip(layout.new_global, 0, layout.orig_id.shape[0] - 1), jnp.int32)
+    return blk_live, orig, ng_safe, slot_live
+
+
+def make_cluster_step(mesh: jax.sharding.Mesh, *, k: int, n_cap: int,
+                      tie_break: str = "random", axis: str = AXIS):
     """jit'd parity migration step over the mesh (k == P required).
 
-    Returns ``step(assignment, pending, rng, capacity) -> (assignment,
-    pending, rng, (committed, willing, admitted))`` operating on the
-    session's canonical (n_cap,) slot-space arrays: the slot↔block
-    permutation happens as device-side gathers inside the one jit program,
-    so an iteration costs no host round-trip. Stats are the same integers
-    the local ``migrate_step`` reports, and successive calls thread the
-    session RNG exactly like the local step does (one 3-way split per
-    iteration).
+    Returns ``step(assignment, pending, rng, capacity, s, dg, blk_live,
+    orig, ng_safe, slot_live) -> (assignment, pending, rng, (committed,
+    willing, admitted))`` operating on the session's canonical (n_cap,)
+    slot-space arrays: the slot↔block permutation happens as device-side
+    gathers inside the one jit program, so an iteration costs no host
+    round-trip. Stats are the same integers the local ``migrate_step``
+    reports, and successive calls thread the session RNG exactly like the
+    local step does (one 3-way split per iteration).
+
+    Everything that changes across streaming rebuilds — the bucketing
+    (``dg``), the layout scatter/gather arrays, the damping ``s`` — enters
+    as a jit *argument*, so the compiled executable is keyed only on array
+    shapes: as long as the padded bucket shapes hold (see ``_grow``), a
+    rebuilt graph dispatches straight into the cached executable instead of
+    re-tracing every superstep. ``s`` is traced as a weak scalar, so
+    different damping values share one executable too (``bernoulli(key, p)``
+    is ``uniform(key) < p`` — bitwise-identical to a baked-in constant).
     """
-    P = dg.num_devices
+    P = int(np.prod(mesh.devices.shape))
     if k != P:
         raise ValueError(f"cluster engine is partition-per-device: k must "
                          f"equal the device count ({k} != {P})")
     if tie_break not in ("random", "stay"):
         raise ValueError(f"unknown tie_break {tie_break!r}")
-    n_cap = layout.n_cap
     if (k * k) * n_cap + n_cap >= 2 ** 31:
         raise ValueError(f"rank keys overflow int32: k={k}, n_cap={n_cap}")
-    halo = dg.halo_size
-    blk_live = jnp.asarray(layout.orig_id >= 0)
-    orig = jnp.asarray(np.maximum(layout.orig_id, 0), jnp.int32)
-    orig_safe = jnp.clip(orig, 0, n_cap - 1)
-    slot_live = jnp.asarray(layout.new_global >= 0)
-    ng_safe = jnp.asarray(
-        np.clip(layout.new_global, 0, layout.orig_id.shape[0] - 1), jnp.int32)
     spec_n = jax.sharding.PartitionSpec(axis)
     spec_r = jax.sharding.PartitionSpec()
     dg_specs = DistGraph(*([spec_n] * 8))
 
     @jax.jit
     def step(assignment: jax.Array, pending: jax.Array, rng: jax.Array,
-             capacity: jax.Array):
+             capacity: jax.Array, s: jax.Array, dg: DistGraph,
+             blk_live: jax.Array, orig: jax.Array, ng_safe: jax.Array,
+             slot_live: jax.Array):
+        # body runs only when jit traces → counts compiles, not dispatches
+        TRACE_COUNTS["cluster_step"] += 1
+        halo = dg.halo_size                     # static under trace
+        orig_safe = jnp.clip(orig, 0, n_cap - 1)
         # scatter slot-space state into blocks (pad slots: stay, no pending)
         assignment_blk = jnp.where(blk_live, assignment[orig_safe], 0)
         pending_blk = jnp.where(blk_live, pending[orig_safe], -1)
@@ -540,15 +595,40 @@ def make_cluster_migrator(mesh: jax.sharding.Mesh, dg: DistGraph,
                                             jax.sharding.PartitionSpec())
 
     def step_on_mesh(assignment: jax.Array, pending: jax.Array,
-                     rng: jax.Array, capacity: jax.Array):
+                     rng: jax.Array, capacity: jax.Array, s, dg: DistGraph,
+                     blk_live: jax.Array, orig: jax.Array,
+                     ng_safe: jax.Array, slot_live: jax.Array):
         # state arrays may still be committed to a previous mesh (local
         # execution, or a pre-rescale device count) — a no-op when already
-        # placed here, a copy exactly once after a backend/mesh change
+        # placed here, a copy exactly once after a backend/mesh change.
+        # Pinning the placement also pins the jit cache key: every dispatch
+        # sees identically-sharded avals.
         args = jax.device_put((assignment, pending, rng, capacity),
                               replicated)
-        return step(*args)
+        return step(*args, float(s), dg, blk_live, orig, ng_safe, slot_live)
 
     return step_on_mesh
+
+
+def make_cluster_migrator(mesh: jax.sharding.Mesh, dg: DistGraph,
+                          layout: BlockLayout, k: int, *, s: float = 0.5,
+                          tie_break: str = "random", axis: str = AXIS):
+    """Compat surface over ``make_cluster_step``: binds one bucketing and a
+    fixed ``s`` and returns ``step(assignment, pending, rng, capacity)``.
+
+    The backend no longer uses this (it keys ``make_cluster_step``
+    executables by shape signature and threads ``dg``/layout per call); it
+    remains for direct callers and the parity tests.
+    """
+    step = make_cluster_step(mesh, k=k, n_cap=layout.n_cap,
+                             tie_break=tie_break, axis=axis)
+    mig_args = (dg, *layout_device_arrays(layout))
+
+    def bound_step(assignment: jax.Array, pending: jax.Array,
+                   rng: jax.Array, capacity: jax.Array):
+        return step(assignment, pending, rng, capacity, s, *mig_args)
+
+    return bound_step
 
 
 def comm_model(dg: DistGraph, k: int, label_bytes: int = 4) -> dict:

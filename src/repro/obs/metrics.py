@@ -198,7 +198,7 @@ class MetricsRegistry:
 _RECORD_COUNTERS = ("events", "adds", "dels", "invalid_events",
                     "stale_dropped", "dup_dropped", "new_placed",
                     "migrations", "local_bytes", "remote_bytes",
-                    "halo_bytes", "collective_bytes")
+                    "halo_bytes", "halo_live_bytes", "collective_bytes")
 # instantaneous state → gauges
 _RECORD_GAUGES = ("superstep", "now", "backlog_adds", "backlog_dels",
                   "cut_edges", "live_edges", "cut_ratio", "imbalance")
@@ -234,5 +234,8 @@ def record_cluster(reg: MetricsRegistry,
         stats["collective_bytes_per_iter_per_device"])
     reg.gauge("cluster_iterations_total").set(stats["iterations_total"])
     reg.gauge("cluster_halo_bytes_total").set(stats["halo_bytes_total"])
+    reg.gauge("cluster_halo_live_bytes_total").set(
+        stats["halo_live_bytes_total"])
+    reg.gauge("cluster_compiled_steps").set(stats["compiled_steps"])
     reg.gauge("cluster_collective_bytes_total").set(
         stats["collective_bytes_total"])

@@ -81,6 +81,7 @@ def test_session_default_backend_is_local():
     # local records carry zeroed comm counters (same telemetry keys)
     system.adapt(3)
     assert system.backend.pop_superstep_comm() == {"halo_bytes": 0,
+                                                   "halo_live_bytes": 0,
                                                    "collective_bytes": 0}
 
 

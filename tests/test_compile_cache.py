@@ -1,0 +1,339 @@
+"""Compile-cache behavior of the sharded backend (DESIGN.md §10).
+
+The contract under test: a streaming run on the sharded backend compiles
+the cluster step at most once per *shape bucket* — zero recompiles after
+warmup. ``repro.core.distributed.TRACE_COUNTS["cluster_step"]`` is bumped
+inside the jitted step *body*, so it moves only when jit traces (and hence
+compiles), never on a cache-hit dispatch; the tests assert directly on it.
+
+Three groups, mirroring tests/test_cluster.py:
+  * device-free — the growth policy, the bucket floors, the content
+    fingerprint, the new ClusterSection knobs;
+  * in-process sharded (skipped below 8 devices) — cache keying across
+    ``s``/``tie_break``/shape-bucket changes, the in-place-mutation
+    rebuild regression, the probe-rollback invariant;
+  * subprocess under 8 fake devices — the end-to-end no-recompile
+    property over a streamed run, with local parity re-pinned.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import (ClusterSection, DynamicGraphSystem, PartitionSection,
+                       StreamSection, SystemConfig, empty_graph)
+from repro.api.backend import _graph_fingerprint
+from repro.graph import generators
+from repro.graph.structure import Graph
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (tier-1-sharded CI runs with fake devices)")
+
+
+def _run(snippet: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _numpy_graph(g: Graph) -> Graph:
+    """Host-array copy of a Graph — the mutable-in-place hazard case."""
+    return Graph(src=np.asarray(g.src).copy(), dst=np.asarray(g.dst).copy(),
+                 node_mask=np.asarray(g.node_mask).copy(),
+                 edge_mask=np.asarray(g.edge_mask).copy())
+
+
+# ---------------------------------------------------------------------------
+# Device-free: growth policy, floors, fingerprint, config knobs
+# ---------------------------------------------------------------------------
+
+def test_cluster_section_validates_growth_pads():
+    with pytest.raises(ValueError, match="block_pad"):
+        ClusterSection(block_pad=-0.1)
+    with pytest.raises(ValueError, match="edge_pad"):
+        ClusterSection(edge_pad=-1.0)
+    cfg = SystemConfig(cluster=ClusterSection(block_pad=0.5, edge_pad=0.0))
+    assert SystemConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_grow_policy_is_shape_stable_until_genuine_growth():
+    from repro.core.distributed import _grow
+    assert _grow(10, 16, 0.25) == 16       # fits the floor: shape unchanged
+    assert _grow(16, 16, 0.25) == 16       # boundary case: still the floor
+    assert _grow(17, 16, 0.25) == 22       # genuine growth: padded jump
+    assert _grow(17, 0, 0.0) == 17         # legacy exact fit (no floor/pad)
+    assert _grow(3, 0, 0.5) == 5           # pad applies from a cold start too
+
+
+def test_bucket_floors_keep_shapes_across_rebuilds():
+    """A rebuild handed the previous shapes as floors reproduces them even
+    when the graph shrank — the compiled step stays valid."""
+    from repro.core.distributed import build_cluster_graph
+    g = generators.fem_grid2d(8)
+    rng = np.random.default_rng(0)
+    assignment = rng.integers(0, 4, size=np.asarray(g.node_mask).shape[0])
+    dg1, l1 = build_cluster_graph(g, assignment, 4)
+    em = np.asarray(g.edge_mask).copy()
+    em[np.flatnonzero(em)[::3]] = False            # drop a third of the edges
+    g2 = dataclasses.replace(g, edge_mask=em)
+    dg2, l2 = build_cluster_graph(
+        g2, assignment, 4, min_block=dg1.block_size,
+        min_edges=int(dg1.src_owner.shape[1]), min_halo=dg1.halo_size)
+    assert dg2.block_size == dg1.block_size
+    assert dg2.src_owner.shape == dg1.src_owner.shape
+    assert dg2.halo_size == dg1.halo_size
+    # without floors the shrunken graph gets smaller buckets
+    dg3, _ = build_cluster_graph(g2, assignment, 4)
+    assert int(dg3.src_owner.shape[1]) < int(dg1.src_owner.shape[1])
+
+
+def test_block_pad_grows_geometrically():
+    from repro.core.distributed import build_cluster_graph
+    g = generators.fem_grid2d(8)
+    n = np.asarray(g.node_mask).shape[0]
+    skew = np.zeros(n, dtype=np.int64)             # everything in partition 0
+    dg, _ = build_cluster_graph(g, skew, 4, block_pad=0.5)
+    live = int(np.asarray(g.node_mask).sum())
+    assert dg.block_size == int(np.ceil(live * 1.5))
+
+
+def test_graph_fingerprint_detects_in_place_mutation():
+    g = _numpy_graph(generators.fem_grid2d(6))
+    fp0 = _graph_fingerprint(g)
+    assert _graph_fingerprint(g) == fp0            # deterministic
+    e0 = int(np.flatnonzero(g.edge_mask)[0])
+    g.edge_mask[e0] = False                        # in-place edge kill
+    assert _graph_fingerprint(g) != fp0
+    g.edge_mask[e0] = True
+    assert _graph_fingerprint(g) == fp0            # content, not identity
+    n0 = int(np.flatnonzero(g.node_mask)[-1])
+    g.node_mask[n0] = False                        # in-place node expiry
+    assert _graph_fingerprint(g) != fp0
+
+
+# ---------------------------------------------------------------------------
+# In-process sharded: cache keying, mutation rebuild, probe rollback
+# ---------------------------------------------------------------------------
+
+def _sharded_system(g, k: int = 8, **cluster_kw):
+    cfg = SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=k, adapt_iters=2),
+        cluster=ClusterSection(backend="sharded", **cluster_kw))
+    return DynamicGraphSystem(g, cfg)
+
+
+@needs_devices
+def test_cache_keying_across_s_tie_break_and_shape():
+    """``s`` is a traced scalar (no retrace); ``tie_break`` and the shape
+    bucket are part of the signature (one compile each); ``invalidate()``
+    drops the cache."""
+    from repro.core.distributed import TRACE_COUNTS
+    g = generators.fem_grid2d(10)
+    system = _sharded_system(g)
+    backend = system.backend
+    system.adapt(1)
+    assert len(backend._migrators) == 1
+    traces = TRACE_COUNTS["cluster_step"]
+
+    # a different damping s dispatches into the SAME executable
+    ctx = dataclasses.replace(system._ctx(), s=0.9)
+    backend.adapt(system.strategy, system.graph, system.state, ctx)
+    assert len(backend._migrators) == 1
+    assert TRACE_COUNTS["cluster_step"] == traces
+
+    # a different tie_break is a different signature: exactly one compile
+    ctx = dataclasses.replace(system._ctx(), tie_break="stay")
+    backend.adapt(system.strategy, system.graph, system.state, ctx)
+    assert len(backend._migrators) == 2
+    assert TRACE_COUNTS["cluster_step"] == traces + 1
+
+    # invalidate() drops the executables (k-change / restore semantics)
+    backend.invalidate()
+    assert backend._migrators == {}
+    system.adapt(1)
+    assert len(backend._migrators) == 1
+    assert TRACE_COUNTS["cluster_step"] == traces + 2
+
+
+@needs_devices
+def test_shape_bucket_growth_compiles_once():
+    """Outgrowing a padded bucket costs exactly one new compile; a rebuild
+    inside the padded shapes costs none."""
+    from repro.core.distributed import TRACE_COUNTS
+    base = _numpy_graph(generators.fem_grid2d(10))
+    pad = 2000                                     # dead edge slots to grow into
+    g = Graph(src=np.concatenate([base.src, np.zeros(pad, base.src.dtype)]),
+              dst=np.concatenate([base.dst, np.zeros(pad, base.dst.dtype)]),
+              node_mask=base.node_mask,
+              edge_mask=np.concatenate([base.edge_mask,
+                                        np.zeros(pad, bool)]))
+    system = _sharded_system(g)
+    backend = system.backend
+    system.adapt(1)
+    sig0 = backend._sig(system._ctx())
+    traces = TRACE_COUNTS["cluster_step"]
+
+    # shrink the live graph in place: rebuild, same padded shapes, no compile
+    em_live = np.flatnonzero(g.edge_mask)
+    g.edge_mask[em_live[::5]] = False
+    system.adapt(1)
+    assert backend._sig(system._ctx()) == sig0
+    assert TRACE_COUNTS["cluster_step"] == traces
+    assert len(backend._migrators) == 1
+
+    # grow far past the padded bucket: exactly one new signature + compile
+    g.edge_mask[em_live] = True
+    dead = np.flatnonzero(~g.edge_mask)
+    live_nodes = np.flatnonzero(g.node_mask)
+    rng = np.random.default_rng(7)
+    a = rng.choice(live_nodes, size=dead.size)
+    b = rng.choice(live_nodes, size=dead.size)
+    keep = a != b
+    g.src[dead[keep]] = a[keep]
+    g.dst[dead[keep]] = b[keep]
+    g.edge_mask[dead[keep]] = True
+    system.adapt(1)
+    assert backend._sig(system._ctx()) != sig0
+    assert TRACE_COUNTS["cluster_step"] == traces + 1
+    assert len(backend._migrators) == 2
+
+
+@needs_devices
+def test_in_place_mutation_triggers_rebuild():
+    """Regression for the stale-bucketing hazard: object identity alone
+    used to skip the rebuild when a Graph was mutated in place."""
+    g = _numpy_graph(generators.fem_grid2d(10))
+    system = _sharded_system(g)
+    backend = system.backend
+    system.adapt(1)
+    fp0 = backend._graph_fp
+    comm0 = dict(backend._comm)
+    # same object, unchanged content: no rebuild (dg object survives)
+    dg0 = backend._dg
+    system.adapt(1)
+    assert backend._dg is dg0
+    # in-place topology change on the SAME object: must rebuild
+    g.edge_mask[np.flatnonzero(g.edge_mask)[::2]] = False
+    system.adapt(1)
+    assert backend._graph_fp != fp0
+    assert backend._dg is not dg0
+    assert backend._comm["halo_live_bytes_per_device"] <= \
+        comm0["halo_live_bytes_per_device"]
+
+
+@needs_devices
+def test_probe_rollback_is_exact():
+    """The comm probe's own iterations must not leak into the session's
+    comm counters: a traced+probed superstep charges exactly
+    adapt_iters iterations."""
+    from repro.obs.trace import Tracer
+    g = generators.fem_grid2d(10)
+    cfg = SystemConfig(
+        partition=PartitionSection(strategy="xdgp", k=8, adapt_iters=3))
+    system = DynamicGraphSystem(g, cfg)
+    backend = system.backend
+
+    from repro.api.backend import ShardedBackend
+    sharded = ShardedBackend(ClusterSection(backend="sharded"))
+    sharded.tracer = Tracer()
+    sharded.comm_probe = True
+    ctx = system._ctx()
+    state = sharded.adapt(system.strategy, system.graph, system.state, ctx)
+    c = sharded._comm
+    P = c["devices"]
+    expected = ctx.adapt_iters * P
+    assert sharded._total_iterations == ctx.adapt_iters
+    assert sharded._total_comm["halo_bytes"] == \
+        expected * c["halo_bytes_per_device"]
+    assert sharded._total_comm["halo_live_bytes"] == \
+        expected * c["halo_live_bytes_per_device"]
+    assert sharded._total_comm["collective_bytes"] == \
+        expected * c["collective_bytes_per_device"]
+    # the probe really ran (it emits synthetic spans) and the trace saw a
+    # genuine compile exactly once
+    phases = sharded.tracer.phase_totals()
+    assert "obs/comm_probe" in phases
+    assert "cluster/recompile" in phases
+    assert np.asarray(state.assignment).shape == \
+        np.asarray(system.state.assignment).shape
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: the end-to-end no-recompile property over a streamed run
+# ---------------------------------------------------------------------------
+
+def test_streaming_no_recompiles_after_warmup():
+    """N streaming supersteps on the sharded backend: once the stream
+    reaches steady state the trace counter must not move — every rebuild
+    keeps the padded shapes and every dispatch hits a cached executable —
+    and the trajectory stays bit-identical to local.
+
+    The stream is a rotating-band churn: nodes cycle through three bands
+    and the window holds ~1.5 bands, so the live topology changes every
+    superstep (real rebuilds — the fingerprint fast-path never fires)
+    while its SIZE oscillates around a steady state the padded buckets
+    absorb."""
+    _run("""
+import numpy as np
+from repro.api import DynamicGraphSystem, PartitionSection, StreamSection, \\
+    SystemConfig, empty_graph
+from repro.stream.ingest import stream_batches
+from repro.core.distributed import TRACE_COUNTS
+
+n, span, phases, per_phase = 300, 60, 12, 400
+rng = np.random.default_rng(11)
+ts, us, vs = [], [], []
+for p in range(phases):                     # band p%3 is active in phase p
+    lo = 100 * (p % 3)
+    a = rng.integers(lo, lo + 100, size=per_phase)
+    b = rng.integers(lo, lo + 100, size=per_phase)
+    keep = a != b
+    ts.append(np.sort(rng.integers(p * span, (p + 1) * span,
+                                   size=int(keep.sum()))))
+    us.append(a[keep]); vs.append(b[keep])
+times, u, v = np.concatenate(ts), np.concatenate(us), np.concatenate(vs)
+
+cfg = SystemConfig(
+    stream=StreamSection(window=90, batch_span=30),
+    partition=PartitionSection(strategy="xdgp", k=8, adapt_iters=3))
+local = DynamicGraphSystem(empty_graph(n, 6000), cfg)
+shard = DynamicGraphSystem(empty_graph(n, 6000),
+                           cfg.with_cluster(backend="sharded",
+                                            halo_pad=0.25))
+batches = list(stream_batches(times, u, v, 30))
+warmup = len(batches) // 2                  # two full band cycles
+rebuilds = 0
+for i, (now, ev) in enumerate(batches):
+    if i == warmup:
+        traces_after_warmup = TRACE_COUNTS["cluster_step"]
+        sigs_after_warmup = len(shard.backend._migrators)
+    local.step(ev, now)
+    fp = shard.backend._graph_fp
+    shard.step(ev, now)
+    rebuilds += int(shard.backend._graph_fp != fp)
+
+# the stream really churns: (nearly) every superstep rebuilt the buckets…
+assert rebuilds >= len(batches) - 2, rebuilds
+# …yet ZERO recompiles after warmup: every padded bucket shape held
+assert TRACE_COUNTS["cluster_step"] == traces_after_warmup, (
+    TRACE_COUNTS["cluster_step"], traces_after_warmup)
+assert len(shard.backend._migrators) == sigs_after_warmup
+# one executable per shape bucket, and only a handful of buckets total
+assert TRACE_COUNTS["cluster_step"] == len(shard.backend._migrators)
+assert len(shard.backend._migrators) <= 5, len(shard.backend._migrators)
+# parity is untouched by the cache (bit-identical to local)
+assert np.array_equal(np.asarray(local.labels), np.asarray(shard.labels))
+print("OK", TRACE_COUNTS["cluster_step"], len(batches))
+""")

@@ -77,7 +77,7 @@ RECORD_KEYS = (
     "migrations", "cut_edges", "live_edges", "cut_ratio", "imbalance",
     "ingest_seconds", "step_seconds", "drift", "dup_dropped",
     "local_bytes", "remote_bytes", "compute_seconds", "halo_bytes",
-    "collective_bytes", "events_per_second",
+    "halo_live_bytes", "collective_bytes", "events_per_second",
 )
 
 
@@ -209,8 +209,9 @@ def test_record_superstep_and_cluster_feed():
         "halo_bytes_per_iter_per_device": 32,
         "halo_live_bytes_per_iter_per_device": 24,
         "collective_bytes_per_iter_per_device": 16,
-        "halo_bytes_total": 640, "collective_bytes_total": 320,
-        "iterations_total": 10})
+        "halo_bytes_total": 640, "halo_live_bytes_total": 480,
+        "collective_bytes_total": 320,
+        "iterations_total": 10, "compiled_steps": 1})
     assert reg.gauge("cluster_devices").values[()] == 2
     assert reg.gauge("cluster_boundary_live").values[
         (("device", "1"),)] == 2
@@ -284,9 +285,10 @@ def test_kernel_profile_disabled_is_noop():
 LOCAL_PHASES = {"superstep", "ingest", "place", "migrate",
                 "kernel/score_select", "commit"}
 SHARDED_PHASES = {"superstep", "ingest", "place", "migrate", "commit",
-                  "cluster/bucket", "cluster/dispatch", "cluster/host_sync",
-                  "cluster/flush", "obs/comm_probe", "comm/halo_exchange",
-                  "comm/quota_collective", "kernel/score"}
+                  "cluster/bucket", "cluster/recompile", "cluster/dispatch",
+                  "cluster/host_sync", "cluster/flush", "obs/comm_probe",
+                  "comm/halo_exchange", "comm/quota_collective",
+                  "kernel/score"}
 
 
 def test_traced_local_session(tmp_path):
