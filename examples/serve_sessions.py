@@ -1,0 +1,89 @@
+"""The graph session server end to end (DESIGN.md §12): one ``GraphServer``
+hosting several tenant sessions behind an admission front door, bursty
+open-loop traffic, backpressure at the queue cap, a checkpoint, a simulated
+crash, and a bit-exact recovery — plus the Prometheus scrape any collector
+would poll.
+
+  PYTHONPATH=src python examples/serve_sessions.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.api import SystemConfig
+from repro.serve import (AdmissionPolicy, CheckpointPolicy, GraphServer,
+                         TrafficShape, synthetic_stream, telemetry_digest,
+                         tick_schedule)
+
+
+def tenant_config(i: int) -> SystemConfig:
+    return SystemConfig.from_dict({
+        "graph": {"n_cap": 128, "e_cap": 2048},
+        "stream": {"window": 400, "a_cap": 256, "d_cap": 128},
+        "partition": {"k": 4},
+        "seed": 7 + i,
+    })
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        server = GraphServer(
+            admission=AdmissionPolicy(queue_cap=50_000, on_full="reject"),
+            checkpoint=CheckpointPolicy(directory=ckpt_dir, every=4))
+        names = [f"tenant{i}" for i in range(3)]
+        for i, name in enumerate(names):
+            server.add_tenant(name, config=tenant_config(i))
+
+        # three independent bursty open-loop arrival processes, quantised
+        # onto 20 scheduling ticks so the run is deterministic
+        shape = TrafficShape(rate=300.0, burst_rate=2500.0,
+                             burst_every=0.5, burst_len=0.1)
+        sched = {}
+        for i, name in enumerate(names):
+            t, u, v = synthetic_stream(96, 500, seed=7 + i)
+            sched[name] = tick_schedule(t, u, v, shape, ticks=20, seed=7 + i)
+
+        for tick in range(20):
+            for name in names:
+                chunk = sched[name][tick]
+                if chunk is not None:
+                    r = server.submit(name, chunk)
+                    if r.rejected:
+                        print(f"  tick {tick}: {name} rejected {r.rejected} "
+                              f"events at pressure {r.pressure:.2f}")
+            server.tick()
+        server.drain()
+
+        stats = server.stats()
+        print("after the run:")
+        for name, t in stats["tenants"].items():
+            print(f"  {name}: {t['supersteps']} supersteps, "
+                  f"{t['admitted']} events, cut={t['cut_ratio']:.3f}, "
+                  f"p99 ingest={1e3 * (t['ingest_p99_s'] or 0):.1f}ms")
+
+        # the cadence checkpointed at tick 20; "crash" and recover fresh
+        digests_before = {n: telemetry_digest(server.tenants[n].system.telemetry)
+                          for n in names}
+        del server                       # the process is gone
+        recovered = GraphServer.recover(ckpt_dir)
+        report = recovered.last_recovery
+        print(f"recovered {len(report['tenants'])} tenants from tick "
+              f"{report['tick']} in {report['seconds'] * 1e3:.0f}ms")
+        exact = all(
+            telemetry_digest(recovered.tenants[n].system.telemetry)
+            == digests_before[n] for n in names)
+        print(f"bit-exact resume: {exact}")
+        assert exact
+
+        # what a Prometheus collector would scrape off the recovered server
+        t, u, v = synthetic_stream(96, 50, seed=99)
+        recovered.submit("tenant0", np.stack([t, u, v], axis=1))
+        recovered.tick()
+        scrape = recovered.scrape().splitlines()
+        print("scrape sample:")
+        for line in scrape[:6]:
+            print(f"  {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -272,6 +272,19 @@ class DynamicGraphSystem:
         """Current max/mean occupancy (incrementally tracked — O(1) read)."""
         return float(imbalance_of(self.tracker))
 
+    @property
+    def backlog(self) -> Tuple[int, int]:
+        """Deferred ingest work: (queued adds, queued dels) still sitting in
+        the stream buffer past a_cap/d_cap — the capacity-backpressure signal
+        the serving layer folds into per-tenant pressure (DESIGN.md §12)."""
+        return self.ingestor.buffer.backlog
+
+    @property
+    def pressure(self) -> float:
+        """Stream-buffer backlog relative to one superstep's drain capacity
+        (≥ 1.0 means ingest is deferring work)."""
+        return self.ingestor.buffer.pressure
+
     def _ctx(self, **runtime: Any) -> StrategyContext:
         p = self.config.partition
         return StrategyContext(

@@ -137,6 +137,35 @@ def _attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, sq, h, d)
 
 
+def cache_write(buf: jax.Array, rows: jax.Array, index: jax.Array) -> jax.Array:
+    """Write ``rows`` (B, S, ...) into a decode cache ``buf`` (B, S_max, ...)
+    starting at ``index``.
+
+    ``index`` is either a scalar — every batch row writes at the same offset
+    (whole-batch prefill) — or a (B,) vector of per-row offsets, which is what
+    continuous batching needs: concurrently active slots sit at different
+    sequence depths, so each writes its own cache row.
+    """
+    idx = jnp.asarray(index, jnp.int32)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, rows.astype(buf.dtype), idx, axis=1)
+    b, s = rows.shape[:2]
+    rowi = jnp.arange(b, dtype=jnp.int32)[:, None]
+    coli = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    return buf.at[rowi, coli].set(rows.astype(buf.dtype))
+
+
+def cache_positions(index: jax.Array, b: int, s: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(q_positions (B,S), last written position (B,)) for a cached write of
+    ``s`` tokens starting at ``index`` (scalar or (B,) per-row)."""
+    idx = jnp.asarray(index, jnp.int32)
+    start = jnp.broadcast_to(jnp.atleast_1d(idx), (b,))
+    positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    return positions, start + jnp.int32(s - 1)
+
+
 def attention(params: Params, x: jax.Array, *, n_heads: int, n_kv: int,
               head_dim: int, positions: jax.Array,
               window: Optional[jax.Array] = None,
@@ -184,14 +213,12 @@ def attention(params: Params, x: jax.Array, *, n_heads: int, n_kv: int,
             out = jnp.moveaxis(outs, 0, 1).reshape(b, s, n_heads, head_dim)
         new_cache = None
     else:
-        ck, cv = cache
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                 cache_index, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                 cache_index, axis=1)
+        ck = cache_write(cache[0], k, cache_index)
+        cv = cache_write(cache[1], v, cache_index)
         s_max = ck.shape[1]
         kv_pos = jnp.arange(s_max, dtype=jnp.int32)[None, :].repeat(b, 0)
-        kv_valid = kv_pos <= cache_index
+        _, last = cache_positions(cache_index, b, s)
+        kv_valid = kv_pos <= last[:, None]
         out = _attend(q, ck, cv, q_positions=positions, kv_positions=kv_pos,
                       window=window, attn_softcap=attn_softcap, kv_mask=kv_valid)
         new_cache = (ck, cv)

@@ -14,7 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import apply_rope
+from repro.models.layers import apply_rope, cache_positions, cache_write
 from repro.runtime.sharding import constrain
 
 Params = Dict[str, Any]
@@ -107,16 +107,14 @@ def mla_attention(params: Params, x: jax.Array, cfg: MLAConfig, *,
             out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, cfg.v_dim)
         new_cache = None
     else:
-        c_lat, c_rope = cache
-        c_lat = jax.lax.dynamic_update_slice_in_dim(
-            c_lat, latent.astype(c_lat.dtype), cache_index, axis=1)
-        c_rope = jax.lax.dynamic_update_slice_in_dim(
-            c_rope, k_rope.astype(c_rope.dtype), cache_index, axis=1)
+        c_lat = cache_write(cache[0], latent, cache_index)
+        c_rope = cache_write(cache[1], k_rope, cache_index)
         s_max = c_lat.shape[1]
         k_nope = (c_lat @ params["w_uk"]).reshape(b, s_max, h, cfg.nope_dim)
         v = (c_lat @ params["w_uv"]).reshape(b, s_max, h, cfg.v_dim)
         kv_pos = jnp.arange(s_max, dtype=jnp.int32)[None, :].repeat(b, 0)
-        kv_valid = kv_pos <= cache_index
+        _, last = cache_positions(cache_index, b, s)
+        kv_valid = kv_pos <= last[:, None]
         out = _mla_attend(q_nope, q_rope, k_nope, c_rope, v,
                           positions, kv_pos, kv_valid)
         new_cache = (c_lat, c_rope)

@@ -294,13 +294,16 @@ def init_cache(cfg: TransformerConfig, batch: int, s_max: int,
 def decode_step(params: Params, token: jax.Array, cache: Tuple,
                 index: jax.Array, cfg: TransformerConfig
                 ) -> Tuple[jax.Array, Tuple]:
-    """One decode step. token (B,1) int32; index scalar int32 — write position.
+    """One decode step. token (B,S) int32; index is the cache write position —
+    a scalar (all rows at the same depth: whole-batch prefill, lockstep
+    decode) or a (B,) vector of per-row positions (continuous batching:
+    concurrently active slots sit at different sequence depths).
 
     Lowered as ``serve_step`` for the decode_32k / long_500k dry-run cells.
     """
-    b = token.shape[0]
+    b, s = token.shape
     x = L.embed(params["embed"], token, cfg.embed_scale).astype(cfg.param_dtype)
-    positions = jnp.full((b, 1), index, jnp.int32)
+    positions, _ = L.cache_positions(index, b, s)
     windows = cfg.layer_windows()
 
     layer_off = cfg.moe_first_dense
@@ -345,9 +348,19 @@ def decode_step(params: Params, token: jax.Array, cache: Tuple,
     return L.softcap(logits, cfg.final_softcap), (new_c0, new_c1)
 
 
-def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig
-            ) -> jax.Array:
-    """Prefill forward returning last-position logits (cache write elided —
-    the dry-run prefill cell measures the compute-dominant forward)."""
-    logits, _ = forward(params, tokens, cfg)
-    return logits[:, -1, :]
+def prefill(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+            cache: Optional[Tuple] = None, cache_index=None):
+    """Prefill forward returning last-position logits.
+
+    Without a cache, the cache write is elided — the dry-run prefill cell
+    measures the compute-dominant forward. With ``cache`` (and
+    ``cache_index``: scalar or (B,) per-row write offsets), the whole prompt
+    chunk runs through the decode path in ONE device call, writing its KV
+    rows, and ``(last logits, cache)`` is returned — the admission path of a
+    continuous-batching engine."""
+    if cache is None:
+        logits, _ = forward(params, tokens, cfg)
+        return logits[:, -1, :]
+    idx = jnp.int32(0) if cache_index is None else cache_index
+    logits, cache = decode_step(params, tokens, cache, idx, cfg)
+    return logits[:, -1, :], cache

@@ -109,6 +109,26 @@ class Histogram:
         self.sums[key] = self.sums.get(key, 0.0) + float(value)
         self.totals[key] = self.totals.get(key, 0) + 1
 
+    def quantile(self, q: float, **labels: Any) -> Optional[float]:
+        """Estimated q-quantile (0 ≤ q ≤ 1) from the cumulative buckets —
+        Prometheus ``histogram_quantile`` semantics: linear interpolation
+        inside the first bucket whose cumulative count reaches q·total.
+        Labels select one series; None when that series has no samples."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        key = _labelkey(labels)
+        total = self.totals.get(key, 0)
+        if total == 0:
+            return None
+        rank = q * total
+        cum_prev, lo = 0, 0.0
+        for le, c in zip(self.buckets, self.counts[key]):
+            if c >= rank:
+                frac = (rank - cum_prev) / max(c - cum_prev, 1)
+                return lo + (le - lo) * frac
+            cum_prev, lo = c, le
+        return self.buckets[-1]     # beyond the last finite bucket
+
     def samples(self) -> Iterable[Tuple[str, LabelKey, float]]:
         for key in sorted(self.totals):
             for le, c in zip(self.buckets, self.counts[key]):

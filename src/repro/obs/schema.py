@@ -110,6 +110,54 @@ def validate_metrics_line(obj: Dict[str, Any], line: int = 0) -> None:
     _num(obj, "value", line)
 
 
+def validate_serve_bench(payload: Dict[str, Any]) -> None:
+    """The serving benchmark result contract (results/bench_serve_sessions
+    .json, DESIGN.md §12): headline throughput + tail latency across N
+    tenants and the kill-and-recover drill outcome.  CI re-validates the
+    committed file so the schema and the artifact cannot drift apart."""
+    _require(isinstance(payload, dict), "serve bench: not an object")
+    _require(isinstance(payload.get("tenants"), int)
+             and payload["tenants"] >= 1,
+             f"serve bench: 'tenants' must be a positive int, "
+             f"got {payload.get('tenants')!r}")
+    for key in ("events_total", "supersteps_total", "ticks"):
+        _require(isinstance(payload.get(key), int) and payload[key] >= 0,
+                 f"serve bench: {key!r} must be a non-negative int, "
+                 f"got {payload.get(key)!r}")
+    for key in ("wall_seconds", "events_per_sec",
+                "ingest_p50_s", "ingest_p99_s"):
+        _num(payload, key, 0)
+        _require(payload[key] >= 0, f"serve bench: negative {key!r}")
+    _require(payload["ingest_p99_s"] >= payload["ingest_p50_s"],
+             "serve bench: p99 below p50")
+    per = payload.get("per_tenant")
+    _require(isinstance(per, dict) and len(per) == payload["tenants"],
+             "serve bench: 'per_tenant' must map every tenant")
+    for name, t in per.items():
+        _require(isinstance(t, dict), f"serve bench: tenant {name!r} entry "
+                 f"must be an object")
+        for key in ("events", "supersteps", "rejected", "shed"):
+            _require(isinstance(t.get(key), int) and t[key] >= 0,
+                     f"serve bench: tenant {name!r} {key!r} must be a "
+                     f"non-negative int, got {t.get(key)!r}")
+    rec = payload.get("recovery")
+    _require(isinstance(rec, dict), "serve bench: 'recovery' must be an "
+             "object (the kill-and-recover drill outcome)")
+    _num(rec, "seconds", 0)
+    _require(rec.get("bit_exact") is True,
+             "serve bench: recovery was not bit-exact")
+    _require(isinstance(rec.get("tenants"), int)
+             and rec["tenants"] == payload["tenants"],
+             "serve bench: recovery must cover every tenant")
+
+
+def validate_serve_bench_file(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        payload = json.load(f)
+    validate_serve_bench(payload)
+    return payload
+
+
 def validate_metrics_file(path: str) -> List[Dict[str, Any]]:
     samples: List[Dict[str, Any]] = []
     with open(path) as f:

@@ -1,3 +1,17 @@
+"""Serving layer (DESIGN.md §12): the LM decode engine and the multi-tenant
+graph session server with its open-loop load generation and crash drill."""
 from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.loadgen import (OpenLoopLoad, TrafficShape, arrival_offsets,
+                                 synthetic_stream, tick_schedule)
+from repro.serve.server import (AdmissionPolicy, AutoscalePolicy,
+                                CheckpointPolicy, GraphServer, SubmitResult,
+                                Tenant, telemetry_digest)
 
-__all__ = ["Completion", "Request", "ServeEngine"]
+__all__ = [
+    "Completion", "Request", "ServeEngine",
+    "GraphServer", "Tenant", "SubmitResult",
+    "AdmissionPolicy", "AutoscalePolicy", "CheckpointPolicy",
+    "telemetry_digest",
+    "TrafficShape", "OpenLoopLoad", "arrival_offsets", "tick_schedule",
+    "synthetic_stream",
+]

@@ -1,0 +1,199 @@
+"""Kill-and-recover drill for the graph session server (DESIGN.md §12).
+
+The drill proves the serving layer's recovery contract end to end, the way
+an operator would: a real process is killed with SIGKILL (no atexit, no
+flush — the kernel just takes it) mid-way through a multi-tenant run, a
+fresh process recovers from the last committed checkpoint, replays the
+deterministic submission schedule from the checkpointed tick, and the
+resulting per-tenant telemetry digests must equal an uninterrupted
+reference run's bit for bit.
+
+Three subcommands over one JSON config:
+
+    python -m repro.serve.drill reference --config cfg.json
+        run every tick uninterrupted, write per-tenant digests
+    python -m repro.serve.drill run --config cfg.json
+        run with checkpoint cadence, SIGKILL self after ``kill_tick``
+    python -m repro.serve.drill recover --config cfg.json
+        recover from the checkpoint, replay the remaining schedule,
+        write digests + recovery wall time
+
+Determinism hinges on two properties: the submission schedule is a pure
+function of the config (``loadgen.tick_schedule``), and the server
+checkpoint captures everything the schedule's replay point needs (every
+session bit-exactly via PR 5's atomic save/restore, plus admitted-but-
+unserved queue chunks and the tick counter).  Wall-clock never influences
+scheduling — only latency *measurement* — so the replay takes the same
+steps the lost process would have.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.api import SystemConfig
+from repro.serve.loadgen import TrafficShape, synthetic_stream, tick_schedule
+from repro.serve.server import (AdmissionPolicy, CheckpointPolicy,
+                                GraphServer, telemetry_digest)
+
+DEFAULT_CONFIG: Dict[str, Any] = {
+    "tenants": 4,
+    "ticks": 24,
+    "kill_tick": 14,          # run: SIGKILL after this tick completes
+    "checkpoint_every": 4,
+    "n_nodes": 96,
+    "n_events": 600,          # per tenant
+    "seed": 7,
+    "k": 4,
+    "n_cap": 128,
+    "e_cap": 2048,
+    "window": 400,
+    "a_cap": 256,
+    "d_cap": 128,
+    "queue_cap": 100_000,
+    "rate": 400.0,            # open-loop shape (relative; only the per-tick
+    "burst_rate": 2000.0,     # quantisation matters for the drill)
+    "burst_every": 0.5,
+    "burst_len": 0.1,
+}
+
+
+def load_config(path: Optional[str]) -> Dict[str, Any]:
+    cfg = dict(DEFAULT_CONFIG)
+    if path:
+        with open(path) as f:
+            user = json.load(f)
+        unknown = sorted(set(user) - set(cfg) - {"workdir"})
+        if unknown:
+            raise ValueError(f"unknown drill config keys: {unknown}")
+        cfg.update(user)
+    if "workdir" not in cfg:
+        raise ValueError("drill config needs a 'workdir' directory")
+    return cfg
+
+
+def _system_config(cfg: Dict[str, Any], i: int) -> SystemConfig:
+    return SystemConfig.from_dict({
+        "graph": {"n_cap": cfg["n_cap"], "e_cap": cfg["e_cap"]},
+        "stream": {"window": cfg["window"], "a_cap": cfg["a_cap"],
+                   "d_cap": cfg["d_cap"]},
+        "partition": {"k": cfg["k"]},
+        "seed": cfg["seed"] + i,
+    })
+
+
+def build_server(cfg: Dict[str, Any], *, checkpoints: bool) -> GraphServer:
+    ckpt = CheckpointPolicy(
+        directory=os.path.join(cfg["workdir"], "ckpt"),
+        every=cfg["checkpoint_every"]) if checkpoints else CheckpointPolicy()
+    server = GraphServer(
+        admission=AdmissionPolicy(queue_cap=cfg["queue_cap"]),
+        checkpoint=ckpt)
+    for i in range(cfg["tenants"]):
+        server.add_tenant(f"tenant{i}", config=_system_config(cfg, i))
+    return server
+
+
+def schedules(cfg: Dict[str, Any]) -> Dict[str, List[Optional[np.ndarray]]]:
+    """Per-tenant deterministic submission schedule (pure function of cfg)."""
+    shape = TrafficShape(rate=cfg["rate"], burst_rate=cfg["burst_rate"],
+                         burst_every=cfg["burst_every"],
+                         burst_len=cfg["burst_len"])
+    out = {}
+    for i in range(cfg["tenants"]):
+        t, u, v = synthetic_stream(cfg["n_nodes"], cfg["n_events"],
+                                   seed=cfg["seed"] + i)
+        out[f"tenant{i}"] = tick_schedule(t, u, v, shape,
+                                          ticks=cfg["ticks"],
+                                          seed=cfg["seed"] + i)
+    return out
+
+def replay(server: GraphServer, cfg: Dict[str, Any],
+           start_tick: int) -> None:
+    """Submit + tick the schedule from ``start_tick`` (0 = whole run), then
+    drain whatever is still queued or deferred."""
+    sched = schedules(cfg)
+    for i in range(start_tick, cfg["ticks"]):
+        for name, chunks in sched.items():
+            if chunks[i] is not None:
+                server.submit(name, chunks[i])
+        server.tick()
+    server.drain()
+
+
+def digests(server: GraphServer) -> Dict[str, Any]:
+    return {name: telemetry_digest(t.system.telemetry)
+            for name, t in server.tenants.items()}
+
+
+def _write(path: str, payload: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, default=float)
+
+
+def cmd_reference(cfg: Dict[str, Any]) -> str:
+    """Uninterrupted run: the ground truth the recovered run must match."""
+    server = build_server(cfg, checkpoints=False)
+    replay(server, cfg, 0)
+    out = os.path.join(cfg["workdir"], "reference.json")
+    _write(out, {"digests": digests(server), "stats": server.stats()})
+    return out
+
+def cmd_run(cfg: Dict[str, Any]) -> None:
+    """Checkpointed run that dies hard: SIGKILL to self after ``kill_tick``
+    ticks — everything since the last checkpoint cadence is lost, which is
+    exactly the failure recover must absorb."""
+    server = build_server(cfg, checkpoints=True)
+    sched = schedules(cfg)
+    for i in range(cfg["ticks"]):
+        for name, chunks in sched.items():
+            if chunks[i] is not None:
+                server.submit(name, chunks[i])
+        server.tick()
+        if server.tick_count >= cfg["kill_tick"]:
+            sys.stdout.flush()
+            os.kill(os.getpid(), signal.SIGKILL)     # no cleanup, no flush
+    raise RuntimeError(f"kill_tick {cfg['kill_tick']} > ticks "
+                       f"{cfg['ticks']}: the drill never died")
+
+
+def cmd_recover(cfg: Dict[str, Any]) -> str:
+    """Recover from the last committed checkpoint, replay the lost ticks,
+    write digests + the recovery report."""
+    t0 = time.perf_counter()
+    server = GraphServer.recover(os.path.join(cfg["workdir"], "ckpt"))
+    recovery = dict(server.last_recovery)
+    replay(server, cfg, server.tick_count)
+    out = os.path.join(cfg["workdir"], "recovered.json")
+    _write(out, {"digests": digests(server), "stats": server.stats(),
+                 "recovery": recovery,
+                 "total_seconds": time.perf_counter() - t0})
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(prog="repro.serve.drill", description=__doc__)
+    p.add_argument("command", choices=("reference", "run", "recover"))
+    p.add_argument("--config", help="JSON config path (see DEFAULT_CONFIG); "
+                                    "must include 'workdir'")
+    ns = p.parse_args(argv)
+    cfg = load_config(ns.config)
+    if ns.command == "reference":
+        print(cmd_reference(cfg))
+    elif ns.command == "run":
+        cmd_run(cfg)
+    else:
+        print(cmd_recover(cfg))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,14 @@ batch at free slots, decode one token per engine step for every active slot,
 and leave on EOS/max-len. Slot state (cache rows) is reused in place; the
 decode step itself is the jit'd ``serve_step`` the dry-run lowers.
 
+Each slot carries its own position cursor (``pos``): concurrently active
+slots sit at different sequence depths, so the decode step takes a (B,)
+per-slot write index — one request joining late must not shift another's
+cache positions. Admission prefills the whole prompt through the
+``prefill()`` cache path in ONE device call per request (prompt lengths are
+padded to power-of-two buckets so admission compiles O(log max_seq) times,
+not once per distinct prompt length).
+
 The engine feeds the observability layer's ``MetricsRegistry``
 (DESIGN.md §11): request/token/completion counters, queue-depth and
 active-slot gauges, and a step-latency histogram — ``engine.metrics``
@@ -16,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +48,13 @@ class Completion:
     tokens: List[int]
 
 
+def _bucket(n: int) -> int:
+    """Smallest power of two ≥ n (prefill compile-shape bucketing)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class ServeEngine:
-    """Fixed-slot continuous batching (B slots, shared position clock)."""
+    """Fixed-slot continuous batching (B slots, per-slot position cursors)."""
 
     def __init__(self, params: Any, cfg: TransformerConfig, batch_slots: int,
                  max_seq: int, greedy: bool = True,
@@ -53,7 +66,7 @@ class ServeEngine:
         self.cache = init_cache(cfg, batch_slots, max_seq)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.active = np.zeros(batch_slots, bool)
-        self.pos = np.zeros(batch_slots, np.int64)
+        self.pos = np.zeros(batch_slots, np.int32)   # next cache write index
         self.budget = np.zeros(batch_slots, np.int64)
         self.uid = np.full(batch_slots, -1, np.int64)
         self.outputs: Dict[int, List[int]] = {}
@@ -61,29 +74,50 @@ class ServeEngine:
         self.greedy = greedy
         self._step = jax.jit(
             lambda p, t, c, i: decode_step(p, t, c, i, cfg))
-        self.clock = 0                         # global position index
+        self._prefill = jax.jit(self._prefill_slot)
         self.metrics = metrics if metrics is not None \
             else MetricsRegistry(namespace="serve")
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(f"prompt of {len(req.prompt)} tokens cannot fit "
+                             f"max_seq={self.max_seq}")
         self.queue.append(req)
         self.metrics.counter("requests_total",
                              "requests submitted to the engine").inc()
         self.metrics.gauge("queue_depth").set(len(self.queue))
+
+    def _prefill_slot(self, params: Any, toks: jax.Array, cache: Any,
+                      slot: jax.Array) -> Any:
+        """Write one slot's prompt KV rows [0, L) with a single prefill call
+        (the slot's cache rows are sliced out, filled, and scattered back)."""
+        sub = tuple(jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
+                    for c in cache)
+        _, sub = prefill(params, toks, self.cfg, cache=sub,
+                         cache_index=jnp.int32(0))
+        return tuple(jax.lax.dynamic_update_slice_in_dim(c, s, slot, axis=1)
+                     for c, s in zip(cache, sub))
 
     def _admit(self) -> None:
         for slot in range(self.b):
             if self.active[slot] or not self.queue:
                 continue
             req = self.queue.popleft()
-            # prefill by stepping the prompt tokens through the decoder
-            toks = req.prompt.astype(np.int32)
-            for t in toks:
-                tok = self.tokens.at[slot, 0].set(int(t))
-                logits, self.cache = self._step(self.params, tok, self.cache,
-                                                jnp.int32(self.clock))
-                self.tokens = tok
-                self.clock += 1
+            toks = np.asarray(req.prompt).astype(np.int32).reshape(-1)
+            n_pre = toks.shape[0] - 1        # the last prompt token feeds the
+            if n_pre > 0:                    # first decode step, as before
+                padded = np.zeros((1, _bucket(n_pre)), np.int32)
+                padded[0, :n_pre] = toks[:-1]
+                # padding rows beyond n_pre hold garbage KV, but every row r
+                # is rewritten by the decode step that reaches position r
+                # before any query can attend to it (write precedes attend)
+                self.cache = self._prefill(self.params, jnp.asarray(padded),
+                                           self.cache, jnp.int32(slot))
+                self.metrics.counter(
+                    "tokens_prefilled_total",
+                    "prompt tokens prefilled at admission").inc(n_pre)
+            self.tokens = self.tokens.at[slot, 0].set(int(toks[-1]))
+            self.pos[slot] = n_pre           # the pending decode writes here
             self.active[slot] = True
             self.uid[slot] = req.uid
             self.budget[slot] = req.max_new_tokens
@@ -98,25 +132,25 @@ class ServeEngine:
             return []
         t0 = time.perf_counter()
         logits, self.cache = self._step(self.params, self.tokens, self.cache,
-                                        jnp.int32(self.clock))
+                                        jnp.asarray(self.pos))
         jax.block_until_ready(logits)          # latency, not dispatch time
         self.metrics.histogram("step_seconds",
                                "decode-step latency").observe(
             time.perf_counter() - t0)
-        self.clock += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)).astype(np.int32)
         done: List[Completion] = []
         new_tokens = np.asarray(self.tokens).copy()
         for slot in range(self.b):
             if not self.active[slot]:
-                continue
-            tok = int(nxt[slot])
+                continue                       # inactive slots rewrite their
+            tok = int(nxt[slot])               # own row in place (pos frozen)
             self.outputs[self.uid[slot]].append(tok)
             self.budget[slot] -= 1
+            self.pos[slot] += 1
             new_tokens[slot, 0] = tok
             self.metrics.counter("tokens_decoded_total",
                                  "tokens decoded across all slots").inc()
-            if self.budget[slot] <= 0 or self.clock >= self.max_seq - 1:
+            if self.budget[slot] <= 0 or self.pos[slot] >= self.max_seq - 1:
                 done.append(Completion(int(self.uid[slot]),
                                        self.outputs.pop(int(self.uid[slot]))))
                 self.active[slot] = False

@@ -1,0 +1,142 @@
+"""Open-loop bursty load generation for the graph session server.
+
+An *open-loop* generator decides arrival times independently of how fast
+the server drains them — the defining property of real user traffic (and
+the reason closed-loop benchmarks underreport tail latency: a closed loop
+slows its offered load down exactly when the server is struggling).  Here
+the offered load is a ``TrafficShape``: a base Poisson process with
+periodic burst windows at a higher rate, the near-real-time survey's
+"bursty arrival" regime (PAPERS.md, arxiv 1410.1903).
+
+Two layers:
+
+* ``arrival_offsets`` — (n,) seconds-from-start for n events under a shape
+  (deterministic per seed; inter-arrival gaps are exponential at the
+  instantaneous rate, so burst windows compress gaps by rate ratio).
+* ``OpenLoopLoad`` — binds a (t, u, v) event stream to those offsets and
+  serves ``take_due(elapsed)`` batches: everything whose arrival time has
+  passed, regardless of server state.  Event *payload* timestamps stay the
+  stream's own logical time (windowing semantics are the tenant's); arrival
+  time only decides *when* the front door sees them.
+
+For deterministic tests/drills, ``tick_schedule`` precomputes the chunk
+sequence per integer tick so replays (e.g. after crash recovery) are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficShape:
+    """Offered-load description: base Poisson + periodic bursts.
+
+    ``rate`` is the base mean arrival rate (events/second of wall time).
+    Every ``burst_every`` seconds a burst window of ``burst_len`` seconds
+    opens during which the instantaneous rate is ``burst_rate``.  With
+    ``burst_rate == 0`` (or ``burst_every == 0``) the process is plain
+    Poisson at ``rate``.
+    """
+
+    rate: float
+    burst_rate: float = 0.0
+    burst_every: float = 0.0
+    burst_len: float = 0.0
+
+    def instantaneous_rate(self, t: float) -> float:
+        if self.burst_rate > 0 and self.burst_every > 0:
+            if (t % self.burst_every) < self.burst_len:
+                return self.burst_rate
+        return self.rate
+
+
+def arrival_offsets(n: int, shape: TrafficShape, seed: int = 0) -> np.ndarray:
+    """(n,) sorted arrival offsets (seconds from start) under ``shape``.
+
+    Sequential thinning-free construction: each gap is Exp(1) scaled by the
+    instantaneous rate at the current time.  Exact for piecewise-constant
+    rates at this granularity and deterministic per seed.
+    """
+    if shape.rate <= 0:
+        raise ValueError(f"base rate must be positive, got {shape.rate}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0, size=n)
+    out = np.empty(n, np.float64)
+    t = 0.0
+    for i in range(n):
+        t += gaps[i] / shape.instantaneous_rate(t)
+        out[i] = t
+    return out
+
+
+class OpenLoopLoad:
+    """One tenant's offered load: a (t, u, v) stream + arrival offsets.
+
+    ``take_due(elapsed)`` returns every not-yet-delivered event whose
+    arrival offset ≤ elapsed, as one (m, 3) int64 batch in stream order —
+    the front door submits it whole, so a server that fell behind sees the
+    backlog as one oversized arrival (which is exactly what backpressure
+    policies must handle).
+    """
+
+    def __init__(self, times: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                 shape: TrafficShape, seed: int = 0):
+        self.events = np.stack([np.asarray(times, np.int64),
+                                np.asarray(src, np.int64),
+                                np.asarray(dst, np.int64)], axis=1)
+        self.offsets = arrival_offsets(self.events.shape[0], shape, seed)
+        self._cursor = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.events.shape[0] - self._cursor
+
+    @property
+    def duration(self) -> float:
+        """Seconds from start until the last arrival."""
+        return float(self.offsets[-1]) if self.offsets.size else 0.0
+
+    def take_due(self, elapsed: float) -> np.ndarray:
+        hi = int(np.searchsorted(self.offsets, elapsed, side="right"))
+        batch = self.events[self._cursor:hi]
+        self._cursor = hi
+        return batch
+
+    def reset(self) -> None:
+        self._cursor = 0
+
+
+def tick_schedule(times: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                  shape: TrafficShape, *, ticks: int, seed: int = 0,
+                  ) -> List[Optional[np.ndarray]]:
+    """Deterministic per-tick chunks: the open-loop arrivals quantised onto
+    ``ticks`` equal wall-time slots.  Pure function of its arguments, so a
+    crash-recovery replay regenerates the exact submission sequence
+    (``serve.drill`` relies on this).  Entry i is the (m, 3) batch submitted
+    at tick i, or None when no events arrive in that slot.
+    """
+    load = OpenLoopLoad(times, src, dst, shape, seed)
+    span = load.duration
+    out: List[Optional[np.ndarray]] = []
+    for i in range(ticks):
+        elapsed = span * (i + 1) / ticks
+        batch = load.take_due(elapsed)
+        out.append(batch if batch.size else None)
+    return out
+
+
+def synthetic_stream(n_nodes: int, n_events: int, *, seed: int = 0,
+                     zipf_a: float = 1.6, span: int = 1000,
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """A deterministic skewed edge stream (power-law-ish endpoints over
+    logical time [0, span)) — the tenant workload for serving tests and
+    drills when a full scenario would be overkill."""
+    rng = np.random.default_rng(seed)
+    u = np.minimum(rng.zipf(zipf_a, n_events) - 1, n_nodes - 1)
+    v = rng.integers(0, n_nodes, n_events)
+    v = np.where(v == u, (v + 1) % n_nodes, v)
+    t = np.sort(rng.integers(0, span, n_events))
+    return t.astype(np.int64), u.astype(np.int64), v.astype(np.int64)

@@ -1,0 +1,542 @@
+"""Graph session server: a multi-tenant serving layer over the xDGP runtime
+(DESIGN.md §12).
+
+One ``GraphServer`` owns many named ``DynamicGraphSystem`` sessions — one
+per tenant/graph — and puts a production front door in front of them:
+
+    submit(tenant, events)          admission: per-tenant queue with a cap
+        │                           and a backpressure policy (reject /
+        │                           shed / queue) fed by the queue depth
+        │                           PLUS the session's own EdgeStreamBuffer
+        │                           backlog (pressure is end-to-end)
+        ▼
+    tick()                          scheduling round: per tenant, coalesce
+        │                           queued chunks into ONE vectorized
+        │                           ``step()`` batch (≤ max_batch_events),
+        │                           observe ingest latency at commit
+        ▼
+    autoscale                       sustained step-latency EWMA or partition
+        │                           occupancy over thresholds → ``rescale()``
+        ▼                           (cooldown-gated, min_k..max_k)
+    checkpoint cadence              every N ticks: atomic per-tenant
+                                    ``save()`` + queue snapshot + manifest;
+                                    ``GraphServer.recover(dir)`` resumes
+                                    every tenant bit-exactly
+
+All counters/gauges/histograms land in one shared ``MetricsRegistry``
+labelled per tenant; ``scrape()`` returns the Prometheus text body.
+
+Wall-clock is injected (``clock=``) so tests can drive virtual time; only
+latency *measurement* uses it — scheduling is tick-driven, so replays of a
+deterministic submission schedule (``loadgen.tick_schedule``) are exact,
+which is what the kill-recovery drill (``repro.serve.drill``) asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, NamedTuple, Optional
+
+import numpy as np
+
+from repro.api import DynamicGraphSystem, SystemConfig
+from repro.api.telemetry import SuperstepRecord
+from repro.graph.structure import Graph
+from repro.obs.metrics import MetricsRegistry
+
+MANIFEST_NAME = "MANIFEST.json"
+SERVER_CKPT_VERSION = 1
+
+# SuperstepRecord fields that are wall-clock measurements, not decisions —
+# excluded from the bit-exactness digest (two identical trajectories never
+# agree on nanoseconds)
+_WALL_CLOCK_FIELDS = ("ingest_seconds", "step_seconds", "compute_seconds")
+
+
+def telemetry_digest(records: List[SuperstepRecord]) -> List[Dict[str, Any]]:
+    """The deterministic projection of a telemetry trail: every
+    SuperstepRecord field except wall-clock timings.  Two runs of the same
+    stream through the same session state must produce EQUAL digests —
+    the serving layer's isolation and recovery contracts are asserted on
+    this."""
+    out = []
+    for r in records:
+        d = dataclasses.asdict(r)
+        for f in _WALL_CLOCK_FIELDS:
+            d.pop(f, None)
+        out.append(d)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Front-door traffic shaping for one tenant.
+
+    ``queue_cap`` bounds the events a tenant may have waiting end-to-end:
+    admission queue + the session's EdgeStreamBuffer backlog (events already
+    stepped but deferred past a_cap/d_cap).  ``on_full`` decides what
+    happens to a submit that would exceed it:
+
+    * ``"reject"`` — refuse the overflow (the caller is told how many);
+    * ``"shed"``   — accept the new events, drop the OLDEST queued ones
+                     (bounded staleness: fresh traffic wins);
+    * ``"queue"``  — accept unconditionally (the cap only drives the
+                     pressure gauge; memory is the caller's problem).
+    """
+
+    queue_cap: int = 100_000
+    on_full: str = "reject"            # "reject" | "shed" | "queue"
+    max_batch_events: int = 8192       # events coalesced per step() call
+
+    def __post_init__(self):
+        if self.on_full not in ("reject", "shed", "queue"):
+            raise ValueError(f"unknown on_full policy {self.on_full!r}; "
+                             f"expected 'reject', 'shed' or 'queue'")
+        if self.queue_cap <= 0 or self.max_batch_events <= 0:
+            raise ValueError("queue_cap and max_batch_events must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """When to ``rescale()`` a tenant's partition count.
+
+    Scale up (k+1) when the step-latency EWMA crosses ``latency_high`` or
+    the fullest partition's occupancy/capacity fraction crosses
+    ``occupancy_high``; scale down (k-1) when both sit below their low
+    water marks AND the front door is idle.  ``cooldown`` ticks must pass
+    between rescales so one burst cannot thrash the partition count.
+    """
+
+    enabled: bool = False
+    min_k: int = 2
+    max_k: int = 64
+    latency_high: float = 1.0          # EWMA step seconds
+    latency_low: float = 0.05
+    occupancy_high: float = 0.85       # max_i occupancy_i / capacity_i
+    occupancy_low: float = 0.30
+    ewma: float = 0.3                  # EWMA weight of the newest step
+    cooldown: int = 8                  # ticks between rescale decisions
+    adapt_iters: int = 8               # re-adapt budget after a rescale
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Crash-recovery cadence: every ``every`` ticks the server checkpoints
+    every tenant (atomic per-tenant ``save()`` + queue snapshot) and then
+    commits the manifest last — a torn checkpoint is never recoverable-to."""
+
+    directory: Optional[str] = None
+    every: int = 0                     # ticks between checkpoints (0 = off)
+
+
+class SubmitResult(NamedTuple):
+    accepted: int
+    rejected: int
+    shed: int
+    pressure: float                    # post-submit, fraction of queue_cap
+
+
+class _Chunk:
+    """One submitted batch awaiting ingestion (arrival stamp + cursor)."""
+
+    __slots__ = ("arrival", "events", "taken")
+
+    def __init__(self, arrival: float, events: np.ndarray, taken: int = 0):
+        self.arrival = arrival
+        self.events = events
+        self.taken = taken
+
+    @property
+    def left(self) -> int:
+        return self.events.shape[0] - self.taken
+
+
+class Tenant:
+    """One named session plus its front-door state."""
+
+    def __init__(self, name: str, system: DynamicGraphSystem,
+                 admission: AdmissionPolicy, autoscale: AutoscalePolicy):
+        self.name = name
+        self.system = system
+        self.admission = admission
+        self.autoscale = autoscale
+        self.chunks: Deque[_Chunk] = deque()
+        self.queued = 0                # events waiting in self.chunks
+        self.admitted = 0
+        self.rejected = 0
+        self.shed = 0
+        self.lat_ewma: Optional[float] = None
+        self.cooldown_left = 0
+        self.rescales = 0
+        self.latencies: Deque[float] = deque(maxlen=4096)  # raw, for quantiles
+
+    # -- backpressure -------------------------------------------------------
+    @property
+    def stream_backlog(self) -> int:
+        """Events the session itself is still holding back (EdgeStreamBuffer
+        capacity backpressure — DESIGN.md §3)."""
+        adds, dels = self.system.backlog
+        return int(adds) + int(dels)
+
+    @property
+    def pressure(self) -> float:
+        """End-to-end queued work as a fraction of the queue cap."""
+        return (self.queued + self.stream_backlog) / self.admission.queue_cap
+
+    # -- queue ops ----------------------------------------------------------
+    def push(self, events: np.ndarray, arrival: float) -> None:
+        self.chunks.append(_Chunk(arrival, events))
+        self.queued += events.shape[0]
+
+    def shed_oldest(self, n: int) -> int:
+        """Drop up to n of the oldest queued events; returns dropped count."""
+        dropped = 0
+        while dropped < n and self.chunks:
+            c = self.chunks[0]
+            take = min(c.left, n - dropped)
+            c.taken += take
+            dropped += take
+            if c.left == 0:
+                self.chunks.popleft()
+        self.queued -= dropped
+        return dropped
+
+    def take_batch(self, cap: int) -> tuple:
+        """Coalesce queued chunks into one (m,3) batch of ≤ cap events (always
+        at least one event if any are queued).  Returns (batch, arrivals of
+        chunks fully drained by this batch)."""
+        rows: List[np.ndarray] = []
+        done_arrivals: List[float] = []
+        taken = 0
+        while self.chunks and taken < cap:
+            c = self.chunks[0]
+            take = min(c.left, cap - taken)
+            rows.append(c.events[c.taken:c.taken + take])
+            c.taken += take
+            taken += take
+            if c.left == 0:
+                done_arrivals.append(c.arrival)
+                self.chunks.popleft()
+        self.queued -= taken
+        batch = (np.concatenate(rows, axis=0) if rows
+                 else np.empty((0, 3), np.int64))
+        return batch, done_arrivals
+
+
+class GraphServer:
+    """Multi-tenant serving front end over ``DynamicGraphSystem`` sessions."""
+
+    def __init__(self, *, admission: Optional[AdmissionPolicy] = None,
+                 autoscale: Optional[AutoscalePolicy] = None,
+                 checkpoint: Optional[CheckpointPolicy] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.admission = admission or AdmissionPolicy()
+        self.autoscale = autoscale or AutoscalePolicy()
+        self.checkpoint_policy = checkpoint or CheckpointPolicy()
+        self.metrics = metrics if metrics is not None \
+            else MetricsRegistry(namespace="serve")
+        self.clock = clock
+        self.tenants: Dict[str, Tenant] = {}
+        self.tick_count = 0
+        self.last_recovery: Optional[Dict[str, Any]] = None
+
+    # -- tenant lifecycle ---------------------------------------------------
+    def add_tenant(self, name: str, graph: Optional[Graph] = None,
+                   config: Optional[SystemConfig] = None, *,
+                   system: Optional[DynamicGraphSystem] = None,
+                   admission: Optional[AdmissionPolicy] = None,
+                   autoscale: Optional[AutoscalePolicy] = None) -> Tenant:
+        """Register a named session (built here from graph+config unless an
+        existing ``system`` is handed over)."""
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} already exists")
+        if any(ch in name for ch in "/\\\0") or name in ("", ".", ".."):
+            raise ValueError(f"tenant name {name!r} is not a valid path leaf")
+        if system is None:
+            system = DynamicGraphSystem(graph, config)
+        t = Tenant(name, system,
+                   admission or self.admission, autoscale or self.autoscale)
+        self.tenants[name] = t
+        self.metrics.gauge("tenants").set(len(self.tenants))
+        return t
+
+    def tenant(self, name: str) -> Tenant:
+        try:
+            return self.tenants[name]
+        except KeyError:
+            raise KeyError(f"unknown tenant {name!r}; have "
+                           f"{sorted(self.tenants)}") from None
+
+    # -- admission front door ------------------------------------------------
+    def submit(self, tenant: str, events: np.ndarray,
+               now: Optional[float] = None) -> SubmitResult:
+        """Admit an event batch for ``tenant`` under its backpressure policy.
+
+        ``events`` rows are (t, u, v) in the tenant's logical stream time.
+        Returns what happened: accepted/rejected/shed counts and the
+        post-submit pressure — a caller seeing pressure near 1.0 should
+        back off (that is the open-loop generator's problem, not ours)."""
+        t = self.tenant(tenant)
+        ev = np.asarray(events, np.int64)
+        if ev.size == 0:
+            return SubmitResult(0, 0, 0, t.pressure)
+        if ev.ndim != 2 or ev.shape[1] != 3:
+            raise ValueError(f"events must be (m, 3) rows of (t, u, v); "
+                             f"got shape {ev.shape}")
+        arrival = self.clock() if now is None else now
+        pol = t.admission
+        room = pol.queue_cap - (t.queued + t.stream_backlog)
+        n = ev.shape[0]
+        accepted, rejected, shed = n, 0, 0
+        if n > room and pol.on_full == "reject":
+            accepted = max(room, 0)
+            rejected = n - accepted
+            ev = ev[:accepted]
+        if accepted:
+            t.push(ev, arrival)
+        if pol.on_full == "shed":
+            over = (t.queued + t.stream_backlog) - pol.queue_cap
+            if over > 0:
+                shed = t.shed_oldest(min(over, t.queued))
+        t.admitted += accepted
+        t.rejected += rejected
+        t.shed += shed
+        m = self.metrics
+        m.counter("events_submitted_total",
+                  "events offered at the front door").inc(n, tenant=tenant)
+        if accepted:
+            m.counter("events_admitted_total",
+                      "events accepted into tenant queues").inc(
+                accepted, tenant=tenant)
+        if rejected:
+            m.counter("events_rejected_total",
+                      "events refused at queue cap").inc(rejected,
+                                                         tenant=tenant)
+        if shed:
+            m.counter("events_shed_total",
+                      "queued events dropped for fresh traffic").inc(
+                shed, tenant=tenant)
+        m.gauge("queue_depth").set(t.queued, tenant=tenant)
+        m.gauge("pressure").set(t.pressure, tenant=tenant)
+        return SubmitResult(accepted, rejected, shed, t.pressure)
+
+    # -- scheduling ---------------------------------------------------------
+    def tick(self) -> Dict[str, Optional[SuperstepRecord]]:
+        """One scheduling round over every tenant: coalesce each tenant's
+        queued chunks into one vectorized ``step()`` (or an empty drain step
+        if only deferred stream backlog remains), observe ingest latency at
+        commit, apply autoscale, honour the checkpoint cadence."""
+        self.tick_count += 1
+        out: Dict[str, Optional[SuperstepRecord]] = {}
+        for name, t in self.tenants.items():
+            if not t.chunks and t.stream_backlog == 0:
+                out[name] = None
+                continue
+            batch, done_arrivals = t.take_batch(t.admission.max_batch_events)
+            rec = t.system.step(batch)
+            commit = self.clock()
+            m = self.metrics
+            for arrival in done_arrivals:
+                lat = max(commit - arrival, 0.0)
+                t.latencies.append(lat)
+                m.histogram("ingest_latency_seconds",
+                            "submit → superstep commit").observe(
+                    lat, tenant=name)
+            m.counter("events_ingested_total",
+                      "events handed to step()").inc(batch.shape[0],
+                                                     tenant=name)
+            m.counter("supersteps_total",
+                      "step() calls served").inc(1, tenant=name)
+            m.histogram("step_seconds",
+                        "superstep wall time").observe(rec.step_seconds,
+                                                       tenant=name)
+            m.gauge("queue_depth").set(t.queued, tenant=name)
+            m.gauge("stream_backlog").set(t.stream_backlog, tenant=name)
+            m.gauge("pressure").set(t.pressure, tenant=name)
+            m.gauge("cut_ratio").set(rec.cut_ratio, tenant=name)
+            m.gauge("partitions").set(t.system.config.partition.k, tenant=name)
+            self._autoscale(t, rec)
+            out[name] = rec
+        pol = self.checkpoint_policy
+        if pol.directory and pol.every and self.tick_count % pol.every == 0:
+            self.save_checkpoint()
+        return out
+
+    def run(self, ticks: int) -> int:
+        """Drive ``ticks`` scheduling rounds; returns supersteps executed."""
+        steps = 0
+        for _ in range(ticks):
+            steps += sum(1 for r in self.tick().values() if r is not None)
+        return steps
+
+    def drain(self, max_ticks: int = 1000) -> int:
+        """Tick until every tenant's queue AND stream backlog are empty."""
+        for i in range(max_ticks):
+            if all(not t.chunks and t.stream_backlog == 0
+                   for t in self.tenants.values()):
+                return i
+            self.tick()
+        raise RuntimeError(f"server did not drain in {max_ticks} ticks")
+
+    # -- autoscale ----------------------------------------------------------
+    def _occupancy_frac(self, t: Tenant) -> float:
+        occ = np.asarray(t.system.tracker.occupancy, np.float64)
+        cap = np.asarray(t.system.state.capacity, np.float64)
+        return float(np.max(occ / np.maximum(cap, 1.0)))
+
+    def _autoscale(self, t: Tenant, rec: SuperstepRecord) -> None:
+        pol = t.autoscale
+        if not pol.enabled:
+            return
+        a = pol.ewma
+        t.lat_ewma = (rec.step_seconds if t.lat_ewma is None
+                      else (1 - a) * t.lat_ewma + a * rec.step_seconds)
+        if t.cooldown_left > 0:
+            t.cooldown_left -= 1
+            return
+        k = t.system.config.partition.k
+        occ = self._occupancy_frac(t)
+        if (occ >= pol.occupancy_high or t.lat_ewma >= pol.latency_high) \
+                and k < pol.max_k:
+            direction = "up"
+        elif (occ <= pol.occupancy_low and t.lat_ewma <= pol.latency_low
+                and t.queued == 0 and k > pol.min_k):
+            direction = "down"
+        else:
+            return
+        new_k = k + 1 if direction == "up" else k - 1
+        t.system.rescale(new_k, adapt_iters=pol.adapt_iters)
+        t.cooldown_left = pol.cooldown
+        t.rescales += 1
+        self.metrics.counter("rescales_total",
+                             "autoscale rescale() calls").inc(
+            1, tenant=t.name, direction=direction)
+        self.metrics.gauge("partitions").set(new_k, tenant=t.name)
+
+    # -- observability ------------------------------------------------------
+    def scrape(self) -> str:
+        """Prometheus text exposition body (the /metrics endpoint)."""
+        return self.metrics.to_prometheus()
+
+    def stats(self) -> Dict[str, Any]:
+        """Point-in-time per-tenant summary (exact quantiles from the raw
+        latency reservoir; the histogram feeds the scrape instead)."""
+        tenants = {}
+        for name, t in self.tenants.items():
+            lats = np.asarray(t.latencies, np.float64)
+            tenants[name] = {
+                "supersteps": t.system._superstep,
+                "k": t.system.config.partition.k,
+                "cut_ratio": t.system.cut_ratio,
+                "queued": t.queued,
+                "stream_backlog": t.stream_backlog,
+                "pressure": t.pressure,
+                "admitted": t.admitted,
+                "rejected": t.rejected,
+                "shed": t.shed,
+                "rescales": t.rescales,
+                "ingest_p50_s": float(np.percentile(lats, 50)) if lats.size else None,
+                "ingest_p99_s": float(np.percentile(lats, 99)) if lats.size else None,
+            }
+        return {"tick": self.tick_count, "tenants": tenants}
+
+    # -- crash recovery -----------------------------------------------------
+    def save_checkpoint(self, directory: Optional[str] = None) -> str:
+        """Checkpoint every tenant + its queue, then commit the manifest
+        LAST (atomic rename) — a crash mid-checkpoint leaves the previous
+        manifest pointing at the previous complete checkpoint."""
+        d = directory or self.checkpoint_policy.directory
+        if not d:
+            raise ValueError("no checkpoint directory configured; set "
+                             "CheckpointPolicy(directory=...) or pass one")
+        os.makedirs(os.path.join(d, "queues"), exist_ok=True)
+        now = self.clock()
+        manifest: Dict[str, Any] = {
+            "version": SERVER_CKPT_VERSION,
+            "tick": self.tick_count,
+            "admission": dataclasses.asdict(self.admission),
+            "autoscale": dataclasses.asdict(self.autoscale),
+            "checkpoint_every": self.checkpoint_policy.every,
+            "tenants": [],
+        }
+        for name, t in self.tenants.items():
+            step = t.system.save(os.path.join(d, "tenants", name))
+            rows = [c.events[c.taken:] for c in t.chunks]
+            ages = [now - c.arrival for c in t.chunks]
+            qpath = os.path.join(d, "queues", f"{name}.npz")
+            tmp = qpath + ".tmp.npz"
+            np.savez(tmp,
+                     events=(np.concatenate(rows, axis=0) if rows
+                             else np.empty((0, 3), np.int64)),
+                     sizes=np.asarray([r.shape[0] for r in rows], np.int64),
+                     ages=np.asarray(ages, np.float64))
+            os.replace(tmp, qpath)
+            manifest["tenants"].append({
+                "name": name, "step": step,
+                "admission": dataclasses.asdict(t.admission),
+                "autoscale": dataclasses.asdict(t.autoscale),
+                "counters": {"admitted": t.admitted, "rejected": t.rejected,
+                             "shed": t.shed, "rescales": t.rescales},
+                "lat_ewma": t.lat_ewma,
+                "cooldown_left": t.cooldown_left,
+            })
+        tmp = os.path.join(d, MANIFEST_NAME + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, os.path.join(d, MANIFEST_NAME))
+        return d
+
+    @classmethod
+    def recover(cls, directory: str, *,
+                metrics: Optional[MetricsRegistry] = None,
+                clock: Callable[[], float] = time.perf_counter,
+                ) -> "GraphServer":
+        """Rebuild a server from its last committed checkpoint: every tenant
+        session resumes bit-exactly (graph, partition state, tracker, window,
+        backlog, telemetry — PR 5's atomic restore), queued-but-unserved
+        events re-enter the admission queues in order, and the tick counter
+        (hence the checkpoint cadence and autoscale cooldowns) continues
+        where it left off.  The recovery report lands in
+        ``server.last_recovery``."""
+        t0 = time.perf_counter()
+        path = os.path.join(directory, MANIFEST_NAME)
+        with open(path) as f:
+            manifest = json.load(f)
+        if manifest.get("version") != SERVER_CKPT_VERSION:
+            raise ValueError(f"{path}: unsupported server checkpoint version "
+                             f"{manifest.get('version')!r}")
+        server = cls(
+            admission=AdmissionPolicy(**manifest["admission"]),
+            autoscale=AutoscalePolicy(**manifest["autoscale"]),
+            checkpoint=CheckpointPolicy(directory=directory,
+                                        every=manifest["checkpoint_every"]),
+            metrics=metrics, clock=clock)
+        server.tick_count = manifest["tick"]
+        now = clock()
+        report: Dict[str, Any] = {"tick": manifest["tick"], "tenants": {}}
+        for entry in manifest["tenants"]:
+            name = entry["name"]
+            system = DynamicGraphSystem.restore(
+                os.path.join(directory, "tenants", name), step=entry["step"])
+            t = server.add_tenant(
+                name, system=system,
+                admission=AdmissionPolicy(**entry["admission"]),
+                autoscale=AutoscalePolicy(**entry["autoscale"]))
+            for key, val in entry["counters"].items():
+                setattr(t, key, val)
+            t.lat_ewma = entry["lat_ewma"]
+            t.cooldown_left = entry["cooldown_left"]
+            q = np.load(os.path.join(directory, "queues", f"{name}.npz"))
+            off = 0
+            for size, age in zip(q["sizes"], q["ages"]):
+                t.push(q["events"][off:off + int(size)], now - float(age))
+                off += int(size)
+            report["tenants"][name] = {"superstep": system._superstep,
+                                       "queued": t.queued}
+        report["seconds"] = time.perf_counter() - t0
+        server.last_recovery = report
+        return server

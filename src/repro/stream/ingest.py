@@ -112,6 +112,13 @@ class EdgeStreamBuffer:
     def backlog(self) -> Tuple[int, int]:
         return self._n_adds, self._n_dels
 
+    @property
+    def pressure(self) -> float:
+        """Queued work relative to one pop()'s drain capacity — 1.0 means
+        the next superstep clears the queue exactly; above that, deferral
+        (capacity backpressure) is already happening."""
+        return max(self._n_adds / self.a_cap, self._n_dels / self.d_cap)
+
     def _consolidate(self) -> None:
         if len(self._add_chunks) > 1:
             s, d, t = (np.concatenate(x) for x in zip(*self._add_chunks))

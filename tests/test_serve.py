@@ -1,0 +1,323 @@
+"""Serving-layer tests (DESIGN.md §12): the multi-tenant GraphServer front
+door (admission, backpressure, autoscale, checkpoint/recover), the open-loop
+load generator, and the continuous-batching ServeEngine's per-slot position
+handling."""
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.serve import (AdmissionPolicy, AutoscalePolicy, CheckpointPolicy,
+                         GraphServer, TrafficShape, arrival_offsets,
+                         synthetic_stream, telemetry_digest, tick_schedule)
+from repro.serve import drill
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _drill_cfg(workdir, **over):
+    cfg = dict(drill.DEFAULT_CONFIG)
+    cfg.update(tenants=2, ticks=10, kill_tick=7, checkpoint_every=3,
+               n_events=200, n_nodes=64, workdir=str(workdir))
+    cfg.update(over)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# load generation
+# ---------------------------------------------------------------------------
+
+def test_arrival_offsets_deterministic_and_bursty():
+    shape = TrafficShape(rate=100.0, burst_rate=1000.0,
+                         burst_every=1.0, burst_len=0.2)
+    a = arrival_offsets(500, shape, seed=3)
+    b = arrival_offsets(500, shape, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) > 0)
+    # arrivals inside burst windows are denser than the base rate by far:
+    # count events landing in [n, n+0.2) vs [n+0.2, n+1.0) windows
+    frac = np.mod(a, 1.0)
+    in_burst = int(np.sum(frac < 0.2))
+    outside = a.size - in_burst
+    # burst windows are 20% of time at 10x rate → ~71% of events
+    assert in_burst > outside
+
+
+def test_tick_schedule_is_pure_and_complete():
+    t, u, v = synthetic_stream(50, 300, seed=5)
+    shape = TrafficShape(rate=200.0)
+    s1 = tick_schedule(t, u, v, shape, ticks=16, seed=5)
+    s2 = tick_schedule(t, u, v, shape, ticks=16, seed=5)
+    assert len(s1) == 16
+    for c1, c2 in zip(s1, s2):
+        if c1 is None:
+            assert c2 is None
+        else:
+            np.testing.assert_array_equal(c1, c2)
+    total = sum(c.shape[0] for c in s1 if c is not None)
+    assert total == 300          # every event lands in exactly one tick
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine per-slot positions (the shared-clock bug regression)
+# ---------------------------------------------------------------------------
+
+def _solo_tokens(params, cfg, req):
+    from repro.serve import ServeEngine
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64)
+    eng.submit(req)
+    (out,) = eng.run_until_drained()
+    return out.tokens
+
+
+def test_engine_staggered_requests_match_solo():
+    """Two requests joining the batch at different times must decode exactly
+    what they decode alone — per-slot cache positions, not a shared clock."""
+    from repro.models import TransformerConfig, init_params
+    from repro.serve import Request, ServeEngine
+    cfg = TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=2,
+                            n_kv_heads=1, head_dim=16, d_ff=64, vocab=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    req_a = Request(uid=0, prompt=np.array([5, 9, 12, 3, 7]),
+                    max_new_tokens=8)
+    req_b = Request(uid=1, prompt=np.array([11, 4, 6]), max_new_tokens=8)
+    solo_a = _solo_tokens(params, cfg, req_a)
+    solo_b = _solo_tokens(params, cfg, req_b)
+
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64)
+    eng.submit(req_a)
+    outs = []
+    for _ in range(3):                 # A decodes alone for three steps,
+        outs.extend(eng.step())        # then B joins mid-flight
+    eng.submit(req_b)
+    outs.extend(eng.run_until_drained())
+    got = {c.uid: c.tokens for c in outs}
+    assert got[0] == solo_a
+    assert got[1] == solo_b
+
+
+# ---------------------------------------------------------------------------
+# GraphServer: tenant isolation
+# ---------------------------------------------------------------------------
+
+def test_tenant_isolation_interleaved_matches_solo(tmp_path):
+    """Interleaving tenants through one server must leave each tenant's
+    telemetry bit-identical to serving it alone."""
+    cfg = _drill_cfg(tmp_path)
+    sched = drill.schedules(cfg)
+
+    both = drill.build_server(cfg, checkpoints=False)
+    drill.replay(both, cfg, 0)
+    interleaved = drill.digests(both)
+
+    for i, name in enumerate(sched):
+        solo = GraphServer(admission=AdmissionPolicy(
+            queue_cap=cfg["queue_cap"]))
+        solo.add_tenant(name, config=drill._system_config(cfg, i))
+        for chunk in sched[name]:
+            if chunk is not None:
+                solo.submit(name, chunk)
+            solo.tick()
+        solo.drain()
+        assert telemetry_digest(solo.tenants[name].system.telemetry) \
+            == interleaved[name], f"tenant {name} diverged under interleaving"
+
+
+# ---------------------------------------------------------------------------
+# GraphServer: backpressure policies
+# ---------------------------------------------------------------------------
+
+def _tiny_server(on_full, queue_cap=300, a_cap=64):
+    from repro.api import SystemConfig
+    server = GraphServer(admission=AdmissionPolicy(
+        queue_cap=queue_cap, on_full=on_full))
+    server.add_tenant("t", config=SystemConfig.from_dict({
+        "graph": {"n_cap": 256, "e_cap": 4096},
+        "stream": {"window": 10_000, "a_cap": a_cap, "d_cap": 32},
+        "partition": {"k": 2},
+    }))
+    return server
+
+
+def _events(n, seed=0):
+    t, u, v = synthetic_stream(200, n, seed=seed)
+    return np.stack([t, u, v], axis=1)
+
+
+def test_backpressure_reject_counts_stream_backlog(tmp_path):
+    server = _tiny_server("reject")
+    r = server.submit("t", _events(200))
+    assert (r.accepted, r.rejected) == (200, 0)
+    server.tick()                       # one step drains a_cap=64 events;
+    t = server.tenants["t"]             # the rest defers inside the buffer
+    assert t.queued == 0
+    assert t.stream_backlog == 136
+    assert 0 < t.pressure < 1
+    r = server.submit("t", _events(200, seed=1))
+    assert r.accepted == 300 - 136      # room is cap minus deferred backlog
+    assert r.rejected == 200 - r.accepted
+    assert server.metrics.counter("events_rejected_total").values[
+        (("tenant", "t"),)] == r.rejected
+    server.drain()
+    assert t.stream_backlog == 0 and t.pressure == 0.0
+
+
+def test_backpressure_shed_drops_oldest():
+    server = _tiny_server("shed")
+    first = _events(250, seed=0)
+    server.submit("t", first)
+    r = server.submit("t", _events(100, seed=1))
+    t = server.tenants["t"]
+    assert r.shed == 50                 # 350 offered, cap 300 → oldest 50 go
+    assert t.queued == 300
+    batch, _ = t.take_batch(10_000)
+    np.testing.assert_array_equal(batch[:200], first[50:])  # head was shed
+
+
+def test_backpressure_queue_accepts_over_cap():
+    server = _tiny_server("queue")
+    r = server.submit("t", _events(400))
+    assert (r.accepted, r.rejected, r.shed) == (400, 0, 0)
+    assert r.pressure > 1.0             # the gauge still tells the truth
+
+
+def test_admission_policy_validates():
+    with pytest.raises(ValueError):
+        AdmissionPolicy(on_full="explode")
+    server = _tiny_server("reject")
+    with pytest.raises(ValueError):
+        server.submit("t", np.zeros((4, 2), np.int64))
+    with pytest.raises(KeyError):
+        server.submit("nobody", _events(1))
+
+
+# ---------------------------------------------------------------------------
+# GraphServer: autoscale
+# ---------------------------------------------------------------------------
+
+def test_autoscale_scales_up_on_occupancy():
+    from repro.api import SystemConfig
+    server = GraphServer(autoscale=AutoscalePolicy(
+        enabled=True, min_k=2, max_k=8, occupancy_high=0.2,
+        latency_high=1e9, latency_low=-1.0, cooldown=0, adapt_iters=2))
+    server.add_tenant("t", config=SystemConfig.from_dict({
+        "graph": {"n_cap": 64, "e_cap": 1024},
+        "stream": {"window": 10_000, "a_cap": 512, "d_cap": 64},
+        "partition": {"k": 2},
+    }))
+    server.submit("t", _events(120, seed=2))
+    server.drain()
+    t = server.tenants["t"]
+    assert t.system.config.partition.k > 2
+    assert t.rescales >= 1
+    assert server.metrics.counter("rescales_total").values[
+        (("direction", "up"), ("tenant", "t"))] >= 1
+
+
+# ---------------------------------------------------------------------------
+# kill-and-recover drill (real SIGKILL, separate processes)
+# ---------------------------------------------------------------------------
+
+def _drill_proc(command, cfg_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.serve.drill", command,
+         "--config", str(cfg_path)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+
+
+def test_kill_recover_drill_is_bit_exact(tmp_path):
+    """The operator's drill: SIGKILL a checkpointed serving process, recover
+    in a fresh process, replay — every tenant must match an uninterrupted
+    reference run bit for bit (wall-clock fields excluded)."""
+    cfg = _drill_cfg(tmp_path)
+    cfg_path = tmp_path / "cfg.json"
+    cfg_path.write_text(json.dumps(cfg))
+
+    run = _drill_proc("run", cfg_path)
+    assert run.returncode == -signal.SIGKILL, \
+        f"drill run should die by SIGKILL, got {run.returncode}: {run.stderr}"
+    assert os.path.exists(tmp_path / "ckpt" / "MANIFEST.json")
+
+    rec = _drill_proc("recover", cfg_path)
+    assert rec.returncode == 0, rec.stderr
+    with open(tmp_path / "recovered.json") as f:
+        recovered = json.load(f)
+    # the checkpoint cadence means the manifest tick trails the kill tick
+    assert 0 < recovered["recovery"]["tick"] < cfg["kill_tick"]
+    assert recovered["recovery"]["seconds"] >= 0
+
+    drill.cmd_reference(cfg)             # reference is in-process (no kill)
+    with open(tmp_path / "reference.json") as f:
+        reference = json.load(f)
+    assert recovered["digests"] == reference["digests"]
+    for name, t in reference["stats"]["tenants"].items():
+        assert recovered["stats"]["tenants"][name]["supersteps"] \
+            == t["supersteps"]
+
+
+def test_server_checkpoint_requires_directory():
+    server = _tiny_server("reject")
+    with pytest.raises(ValueError):
+        server.save_checkpoint()
+
+
+# ---------------------------------------------------------------------------
+# metrics surface: quantiles + the serve bench schema
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantile_interpolates():
+    from repro.obs.metrics import Histogram
+    h = Histogram("lat", buckets=(0.1, 0.2, 0.4, 0.8))
+    assert h.quantile(0.5) is None
+    for v in (0.05, 0.15, 0.15, 0.3):
+        h.observe(v)
+    q50 = h.quantile(0.5)
+    assert 0.1 <= q50 <= 0.2
+    assert h.quantile(1.0) == pytest.approx(0.4)
+    h.observe(5.0)                       # beyond the last bucket
+    assert h.quantile(1.0) == 0.8
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_serve_bench_schema_validates():
+    from repro.obs.schema import SchemaError, validate_serve_bench
+    good = {
+        "tenants": 2, "ticks": 10, "events_total": 100,
+        "supersteps_total": 20, "wall_seconds": 1.0,
+        "events_per_sec": 100.0, "ingest_p50_s": 0.01, "ingest_p99_s": 0.05,
+        "per_tenant": {
+            "a": {"events": 50, "supersteps": 10, "rejected": 0, "shed": 0},
+            "b": {"events": 50, "supersteps": 10, "rejected": 0, "shed": 0},
+        },
+        "recovery": {"seconds": 0.5, "bit_exact": True, "tenants": 2},
+    }
+    validate_serve_bench(good)
+    for mutate in (
+        lambda d: d.update(tenants=0),
+        lambda d: d.update(ingest_p99_s=0.001),          # p99 < p50
+        lambda d: d.pop("per_tenant"),
+        lambda d: d["recovery"].update(bit_exact=False),
+        lambda d: d["recovery"].update(tenants=1),
+    ):
+        bad = json.loads(json.dumps(good))
+        mutate(bad)
+        with pytest.raises(SchemaError):
+            validate_serve_bench(bad)
+
+
+def test_committed_serve_bench_results_validate():
+    from repro.obs.schema import validate_serve_bench_file
+    path = os.path.join(REPO, "results", "bench_serve_sessions.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed serve bench results")
+    payload = validate_serve_bench_file(path)
+    assert payload["tenants"] >= 8
