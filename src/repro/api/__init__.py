@@ -4,7 +4,9 @@ Four pieces (DESIGN.md §8, §10):
 
   * ``PartitionStrategy`` — pluggable partitioning policy (init / place /
     adapt hooks) with a registry: ``static``, ``hash``, ``random``, ``dgr``,
-    ``mnn``, ``fennel``, ``xdgp`` (+ seed-era aliases).
+    ``mnn``, ``fennel``, ``xdgp``, plus the rival migrators ``spinner``,
+    ``sdp``, ``restream`` (+ seed-era aliases;
+    ``canonical_strategy_names()`` lists each exactly once).
   * ``ExecutionBackend`` — pluggable execution layer (``local`` |
     ``sharded``) deciding *where* the adaptation runs: on-host, or
     partition-per-device SPMD with bit-identical assignments.
@@ -26,8 +28,9 @@ from repro.api.config import (ClusterSection, ComputeSection, GraphSection,
                               PartitionSection, StreamSection, SystemConfig,
                               TelemetrySection)
 from repro.api.strategy import (Block, Dgr, Hash, Mnn, Modulo, OnlineFennel,
-                                PartitionStrategy, Random, Static,
-                                StrategyContext, XdgpAdaptive,
+                                PartitionStrategy, Random, Restream, Sdp,
+                                Spinner, Static, StrategyContext,
+                                XdgpAdaptive, canonical_strategy_names,
                                 register_strategy, resolve_strategy,
                                 strategy_names)
 from repro.api.system import (DynamicGraphSystem, SuperstepRecord,
@@ -42,9 +45,10 @@ __all__ = [
     # strategy protocol + registry
     "PartitionStrategy", "StrategyContext",
     "register_strategy", "resolve_strategy", "strategy_names",
+    "canonical_strategy_names",
     # shipped strategies
     "Static", "Hash", "Random", "Modulo", "Block", "Dgr", "Mnn",
-    "OnlineFennel", "XdgpAdaptive",
+    "OnlineFennel", "XdgpAdaptive", "Spinner", "Sdp", "Restream",
     # execution backends
     "ExecutionBackend", "LocalBackend", "ShardedBackend",
     "register_execution_backend", "resolve_execution_backend",

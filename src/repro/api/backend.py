@@ -204,9 +204,11 @@ class ShardedBackend:
     ``shard_map``, and maps assignments back. Compiled steps take the
     bucketing as jit *arguments* and are cached per shape signature, so a
     shape-stable rebuild costs zero recompiles — the ``cluster/recompile``
-    span fires only on genuine shape growth. Strategies with
-    ``adapts=False`` fall through to their local hooks (there is nothing
-    to distribute).
+    span fires only on genuine shape growth. Only strategies flagged
+    ``cluster_native`` (the xDGP migrator — the deferred-commit step the
+    cluster engine implements) route through it; everything else —
+    non-adapting baselines *and* rival migrators (spinner/sdp/restream)
+    with different step semantics — falls through to its local hooks.
 
     Decision parity with the local path is exact — same RNG draws, same
     quota order — so ``distribute()``/``gather()`` can move a session
@@ -499,7 +501,7 @@ class ShardedBackend:
 
     # -- execution hooks ----------------------------------------------------
     def adapt(self, strategy, graph, state, ctx):
-        if not getattr(strategy, "adapts", False):
+        if not getattr(strategy, "cluster_native", False):
             return strategy.adapt(graph, state, ctx)
         self._ensure(graph, state, ctx)
         first = self._sig(ctx) not in self._migrators
@@ -522,7 +524,7 @@ class ShardedBackend:
         return state
 
     def converge(self, strategy, graph, state, ctx):
-        if not getattr(strategy, "adapts", False):
+        if not getattr(strategy, "cluster_native", False):
             return strategy.converge(graph, state, ctx)
         self._ensure(graph, state, ctx)
         state, hist = _run_to_convergence(
@@ -534,7 +536,7 @@ class ShardedBackend:
         return state, hist
 
     def adapt_rounds(self, strategy, graph, state, iters, ctx):
-        if not getattr(strategy, "adapts", False):
+        if not getattr(strategy, "cluster_native", False):
             return strategy.adapt_rounds(graph, state, iters, ctx)
         self._ensure(graph, state, ctx)
         state, hist = _adapt_rounds(

@@ -24,14 +24,21 @@ registry; ``resolve_strategy`` turns a name / class / instance into an
 instance and raises a ``ValueError`` listing every registered name on a
 typo. ``repro.core.initial.initial_partition`` dispatches through the same
 registry, so "adaptive vs. static-hash" is two strategy values — never two
-code paths.
+code paths. ``canonical_strategy_names()`` lists each strategy exactly once
+(primary names, no aliases) — the form every "run all strategies" loop
+(arena benchmark, conformance suite) must use, or aliases run duplicates.
 
 Example — resolve strategies from the registry and plug in a custom one
 (doctested in CI):
 
-    >>> from repro.api import register_strategy, resolve_strategy, strategy_names
+    >>> from repro.api import (register_strategy, resolve_strategy,
+    ...                        strategy_names, canonical_strategy_names)
     >>> {"static", "hash", "fennel", "xdgp"} <= set(strategy_names())
     True
+    >>> {"spinner", "sdp", "restream"} <= set(canonical_strategy_names())
+    True
+    >>> "hsh" in strategy_names(), "hsh" in canonical_strategy_names()
+    (True, False)
     >>> resolve_strategy("xdgp").name          # name, class or instance
     'xdgp'
     >>> from repro.api.strategy import StrategyBase
@@ -57,10 +64,13 @@ from repro.compat import resolve_backend
 from repro.core.initial import (block_partition, deterministic_greedy,
                                 hash_partition, min_neighbours,
                                 modulo_partition, random_partition)
-from repro.core.partition_state import PartitionState
+from repro.core.partition_state import PartitionState, imbalance
 from repro.core.repartitioner import (History, adapt_jit, adapt_rounds,
                                       run_to_convergence)
-from repro.graph.structure import Graph, GraphDelta
+from repro.core.restream import restream_state
+from repro.core.sdp import sdp_adapt_jit, sdp_refine_step
+from repro.core.spinner import spinner_adapt_jit, spinner_step
+from repro.graph.structure import Graph, GraphDelta, cut_ratio
 from repro.stream.placement import place_delta
 
 
@@ -113,6 +123,7 @@ class PartitionStrategy(Protocol):
 # ---------------------------------------------------------------------------
 
 _REGISTRY: Dict[str, Callable[..., "StrategyBase"]] = {}
+_CANONICAL: list = []          # primary names only, registration order
 
 
 def register_strategy(name: str, *aliases: str
@@ -124,6 +135,7 @@ def register_strategy(name: str, *aliases: str
             if key in _REGISTRY:
                 raise ValueError(f"strategy name {key!r} already registered")
             _REGISTRY[key] = factory
+        _CANONICAL.append(name)
         return factory
 
     return deco
@@ -132,6 +144,14 @@ def register_strategy(name: str, *aliases: str
 def strategy_names() -> Tuple[str, ...]:
     """Every registered name, aliases included, sorted."""
     return tuple(sorted(_REGISTRY))
+
+
+def canonical_strategy_names() -> Tuple[str, ...]:
+    """Each registered strategy exactly once — primary names, no aliases,
+    sorted. "Run every strategy" loops (the arena, the conformance suite)
+    iterate this; ``strategy_names()`` would silently run ``hash`` again as
+    ``hsh``, ``xdgp`` again as ``adaptive``, and so on."""
+    return tuple(sorted(_CANONICAL))
 
 
 def resolve_strategy(spec: Any, **kwargs: Any) -> "StrategyBase":
@@ -164,14 +184,19 @@ class StrategyBase:
     """Default behaviour: hash init, arrivals inherit their padded-slot
     label, and no adaptation. Subclasses override the hooks they care about.
 
-    ``adapts`` tells the execution backend whether the strategy's
-    adaptation hooks do real migration work: the sharded backend executes
-    xDGP-style migration through the cluster engine, and falls back to the
-    (free, no-op) local hooks for strategies that never migrate.
+    ``adapts`` declares that the strategy's adaptation hooks do real
+    migration work (the session uses it for telemetry and drift triggers).
+    ``cluster_native`` additionally declares that those hooks implement the
+    xDGP deferred-commit step — the one the sharded backend's cluster
+    engine reproduces — so the backend may replace them with its SPMD
+    migrator. Rival migrators (spinner/sdp/restream) set ``adapts=True``
+    but stay ``cluster_native=False``: under a sharded session they run
+    their own local hooks on the gathered arrays.
     """
 
     name = "base"
     adapts = False                 # True → adapt/converge run migrations
+    cluster_native = False         # True → sharded backend may take over adapt
 
     def init(self, graph: Graph, k: int) -> jax.Array:
         return hash_partition(graph, k)
@@ -305,6 +330,7 @@ class XdgpAdaptive(OnlineFennel):
 
     name = "xdgp"
     adapts = True
+    cluster_native = True
 
     def __init__(self, placement: str = "online", passes: Optional[int] = None):
         if placement not in ("online", "inherit"):
@@ -362,3 +388,179 @@ class XdgpAdaptive(OnlineFennel):
                             tie_break=ctx.tie_break,
                             record_history=ctx.record_history,
                             backend=backend, plan=self._plan(graph, backend))
+
+
+def _maybe_plan(graph: Graph, backend: str):
+    """Pre-pack the adjacency for the fused scorer when the pallas backend
+    is selected (batch drivers only — see ``XdgpAdaptive._plan``)."""
+    if backend != "pallas":
+        return None
+    from repro.kernels.migration_kernels import build_plan
+    return build_plan(graph)
+
+
+@register_strategy("spinner", "lpa")
+class Spinner(StrategyBase):
+    """Spinner-style balanced label propagation (arXiv 1404.3861).
+
+    Iterative LPA with an additive free-capacity bonus, Bernoulli(s)
+    damping and deterministic free-capacity admission — see
+    ``repro.core.spinner``. Spinner is a *batch* repartitioner: arrivals
+    inherit their slot label (the paper restreams periodically rather than
+    placing online), and every adaptation hook runs balanced-LPA sweeps.
+    Shares the fused BSR histogram kernels with xDGP when the pallas
+    scoring backend is selected.
+    """
+
+    name = "spinner"
+    adapts = True
+
+    def __init__(self, balance_weight: float = 0.5):
+        self.balance_weight = balance_weight
+        self._adapt_cache: Dict[Tuple[float, float, int, str], Callable] = {}
+
+    def _step_fn(self, graph: Graph, ctx: StrategyContext, backend: str):
+        plan = _maybe_plan(graph, backend)
+        return lambda st: spinner_step(st, graph, plan,
+                                       balance_weight=self.balance_weight,
+                                       s=ctx.s, backend=backend)
+
+    def adapt(self, graph: Graph, state: PartitionState,
+              ctx: StrategyContext) -> PartitionState:
+        backend = resolve_backend(ctx.backend)
+        key = (self.balance_weight, ctx.s, ctx.adapt_iters, backend)
+        fn = self._adapt_cache.get(key)
+        if fn is None:
+            w, s, iters, bk = key
+            fn = jax.jit(lambda g, st: spinner_adapt_jit(
+                g, st, iters=iters, balance_weight=w, s=s, backend=bk))
+            self._adapt_cache[key] = fn
+        return fn(graph, state)
+
+    def converge(self, graph: Graph, state: PartitionState,
+                 ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        backend = resolve_backend(ctx.backend)
+        return run_to_convergence(
+            graph, state, patience=ctx.patience, max_iters=ctx.max_iters,
+            tie_break=ctx.tie_break, rel_tol=ctx.rel_tol,
+            record_history=ctx.record_history,
+            step_fn=self._step_fn(graph, ctx, backend))
+
+    def adapt_rounds(self, graph: Graph, state: PartitionState, iters: int,
+                     ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        backend = resolve_backend(ctx.backend)
+        return adapt_rounds(graph, state, iters,
+                            record_history=ctx.record_history,
+                            step_fn=self._step_fn(graph, ctx, backend))
+
+
+@register_strategy("sdp")
+class Sdp(OnlineFennel):
+    """SDP-style scalable real-time dynamic placement (arXiv 2110.15669).
+
+    Online Fennel placement of arrivals (inherited) plus a boundary-only
+    strict-improvement refinement sweep per adaptation call — see
+    ``repro.core.sdp``. Cheap by construction: only cut-boundary vertices
+    reconsider, and only on a strict greedy·balance gain.
+    """
+
+    name = "sdp"
+    adapts = True
+
+    def __init__(self, passes: Optional[int] = None):
+        super().__init__(passes=passes)
+        self._adapt_cache: Dict[Tuple[float, int, str], Callable] = {}
+
+    def _step_fn(self, graph: Graph, ctx: StrategyContext, backend: str):
+        plan = _maybe_plan(graph, backend)
+        return lambda st: sdp_refine_step(st, graph, plan, s=ctx.s,
+                                          backend=backend)
+
+    def adapt(self, graph: Graph, state: PartitionState,
+              ctx: StrategyContext) -> PartitionState:
+        backend = resolve_backend(ctx.backend)
+        key = (ctx.s, ctx.adapt_iters, backend)
+        fn = self._adapt_cache.get(key)
+        if fn is None:
+            s, iters, bk = key
+            fn = jax.jit(lambda g, st: sdp_adapt_jit(g, st, iters=iters,
+                                                     s=s, backend=bk))
+            self._adapt_cache[key] = fn
+        return fn(graph, state)
+
+    def converge(self, graph: Graph, state: PartitionState,
+                 ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        backend = resolve_backend(ctx.backend)
+        return run_to_convergence(
+            graph, state, patience=ctx.patience, max_iters=ctx.max_iters,
+            tie_break=ctx.tie_break, rel_tol=ctx.rel_tol,
+            record_history=ctx.record_history,
+            step_fn=self._step_fn(graph, ctx, backend))
+
+    def adapt_rounds(self, graph: Graph, state: PartitionState, iters: int,
+                     ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        backend = resolve_backend(ctx.backend)
+        return adapt_rounds(graph, state, iters,
+                            record_history=ctx.record_history,
+                            step_fn=self._step_fn(graph, ctx, backend))
+
+
+@register_strategy("restream", "lemerrer")
+class Restream(OnlineFennel):
+    """Le Merrer-style restreaming repartitioning (arXiv 1310.8211),
+    layered on the online Fennel placement path.
+
+    Arrivals are placed online (inherited); each adaptation call replays
+    one sequential restreaming pass over the whole live graph with the
+    same greedy·balance rule, seeded by the current assignment — see
+    ``repro.core.restream``. ``period`` runs the (host-side, O(V+E)) pass
+    every Nth ``adapt`` call on this instance; the default restreams every
+    superstep. ``converge`` repeats passes until one moves nothing (a pass
+    fixpoint is stable, so further passes are provably no-ops).
+    """
+
+    name = "restream"
+    adapts = True
+
+    def __init__(self, passes: Optional[int] = None, period: int = 1):
+        if period < 1:
+            raise ValueError(f"period must be >= 1, got {period}")
+        super().__init__(passes=passes)
+        self.period = period
+        self._calls = 0
+
+    def adapt(self, graph: Graph, state: PartitionState,
+              ctx: StrategyContext) -> PartitionState:
+        self._calls += 1
+        if (self._calls - 1) % self.period:
+            return state
+        state, _ = restream_state(state, graph)
+        return state
+
+    def _record(self, hist: History, graph: Graph, state: PartitionState,
+                moved: int, record: bool) -> None:
+        if record:
+            hist.cut_ratio.append(float(cut_ratio(graph, state.assignment)))
+            hist.migrations.append(moved)
+            hist.willing.append(moved)
+            hist.imbalance.append(float(imbalance(state, graph.node_mask)))
+
+    def converge(self, graph: Graph, state: PartitionState,
+                 ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        hist = History.empty()
+        for _ in range(ctx.max_iters):
+            state, stats = restream_state(state, graph)
+            moved = int(stats.committed)
+            self._record(hist, graph, state, moved, ctx.record_history)
+            if moved == 0:
+                break
+        return state, hist
+
+    def adapt_rounds(self, graph: Graph, state: PartitionState, iters: int,
+                     ctx: StrategyContext) -> Tuple[PartitionState, History]:
+        hist = History.empty()
+        for _ in range(iters):
+            state, stats = restream_state(state, graph)
+            self._record(hist, graph, state, int(stats.committed),
+                         ctx.record_history)
+        return state, hist

@@ -1,0 +1,94 @@
+"""Le Merrer-style restreaming repartitioning (arXiv 1310.8211).
+
+Restreaming re-runs a one-pass streaming partitioner over the *current*
+graph, seeded with the *current* assignment: each live vertex, in id order,
+is removed from its partition and immediately re-placed with the same
+Fennel-style greedy·balance rule the online placer uses,
+
+    score(v, j) = counts[v, j] · (1 − occ_j / C_j)
+
+restricted to partitions with free room, preferring the current partition
+on ties (so a converged placement is a fixpoint and repeated passes are
+idempotent once quiet). Because each vertex is removed before it is
+re-placed, total occupancy during the scan is ``live − 1`` which is
+strictly below total capacity (capacities are provisioned with slack over
+the slot count), so a partition with room always exists and the capacity
+invariant holds by construction.
+
+The pass is a deliberate *host-side* numpy scan over the CSR adjacency —
+restreaming is inherently sequential (each placement sees the occupancies
+left by every earlier one), which is exactly the property the streaming
+papers exploit and the reason it cannot share the vectorised migration
+kernels. It is deterministic: no RNG, stable id order, pure integer/float64
+arithmetic — the differential oracle in
+``tests/test_strategy_differential.py`` is a literal replay of this loop.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.migration import MigrationStats
+from repro.core.partition_state import PartitionState
+from repro.graph.structure import Graph, to_csr
+
+
+def restream_pass(graph: Graph, assignment: np.ndarray, capacity: np.ndarray,
+                  k: int) -> Tuple[np.ndarray, int]:
+    """One restreaming sweep over the live vertices in id order.
+
+    Args:
+      assignment: (n_cap,) current labels (host array, any int dtype).
+      capacity:   (k,) hard per-partition capacities.
+
+    Returns ``(labels, moved)`` — the updated (n_cap,) int32 labels and the
+    number of vertices that changed partition. ``moved == 0`` means the
+    assignment is a fixpoint of the pass (further passes are no-ops).
+    """
+    indptr, indices = to_csr(graph)
+    nm = np.asarray(graph.node_mask)
+    lab = np.asarray(assignment).astype(np.int64).copy()
+    cap = np.asarray(capacity).astype(np.int64)
+    live = np.flatnonzero(nm)
+    occ = np.bincount(np.clip(lab[live], 0, k - 1), minlength=k)
+    moved = 0
+    for v in live:
+        cur = int(np.clip(lab[v], 0, k - 1))
+        occ[cur] -= 1                     # remove v, then re-place it
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        nbrs = nbrs[nm[nbrs]]
+        counts = np.bincount(np.clip(lab[nbrs], 0, k - 1),
+                             minlength=k).astype(np.float64)
+        room = occ < cap
+        score = counts * (1.0 - occ / np.maximum(cap, 1))
+        score = np.where(room, score, -np.inf)
+        if not room.any():
+            best = cur                    # oversubscribed state: don't worsen
+        elif room[cur] and score[cur] >= score.max():
+            best = cur                    # prefer current on ties → fixpoint
+        else:
+            best = int(np.argmax(score))
+        lab[v] = best
+        occ[best] += 1
+        moved += int(best != cur)
+    return lab.astype(np.int32), moved
+
+
+def restream_state(state: PartitionState, graph: Graph,
+                   ) -> Tuple[PartitionState, MigrationStats]:
+    """Run one pass and thread the result back into the device-side
+    ``PartitionState`` (the strategy's step_fn shape)."""
+    lab, moved = restream_pass(graph, np.asarray(state.assignment),
+                               np.asarray(state.capacity), state.k)
+    new_state = PartitionState(
+        assignment=jnp.asarray(lab),
+        pending=jnp.full_like(state.pending, -1),
+        capacity=state.capacity,
+        rng=state.rng,
+        iteration=state.iteration + 1,
+        last_moves=jnp.asarray(moved, jnp.int32),
+    )
+    m = jnp.asarray(moved, jnp.int32)
+    return new_state, MigrationStats(committed=m, willing=m, admitted=m)

@@ -158,6 +158,78 @@ def validate_serve_bench_file(path: str) -> Dict[str, Any]:
     return payload
 
 
+_ARENA_ROW_NUMS = ("cut_final", "cut_mean", "imbalance_final",
+                   "wall_seconds", "exec_cost_total")
+
+
+def validate_arena_bench(payload: Dict[str, Any]) -> None:
+    """The strategy-arena result contract (results/bench_strategy_arena
+    .json, DESIGN.md §13): one row per (scenario, strategy) cell — full
+    cross product, no silently missing cells — scoring cut, balance,
+    migration volume, wall time and the cost-model total, plus per-scenario
+    winners drawn from the swept strategies.  CI re-validates the committed
+    file so the schema and the artifact cannot drift apart."""
+    _require(isinstance(payload, dict), "arena bench: not an object")
+    _require(payload.get("bench") == "strategy_arena",
+             f"arena bench: 'bench' must be 'strategy_arena', "
+             f"got {payload.get('bench')!r}")
+    for key in ("scenarios", "strategies"):
+        val = payload.get(key)
+        _require(isinstance(val, list) and val
+                 and all(isinstance(x, str) and x for x in val),
+                 f"arena bench: {key!r} must be a non-empty list of names")
+        _require(len(set(val)) == len(val),
+                 f"arena bench: duplicate entries in {key!r} — canonical "
+                 f"names only, aliases would run a strategy twice")
+    scenarios = payload["scenarios"]
+    strategies = payload["strategies"]
+    rows = payload.get("rows")
+    _require(isinstance(rows, list), "arena bench: 'rows' must be a list")
+    _require(len(rows) == len(scenarios) * len(strategies),
+             f"arena bench: expected {len(scenarios) * len(strategies)} rows "
+             f"(full scenario x strategy cross product), got "
+             f"{len(rows) if isinstance(rows, list) else rows!r}")
+    seen = set()
+    for i, row in enumerate(rows):
+        _require(isinstance(row, dict), f"arena bench: row {i} not an object")
+        _require(row.get("scenario") in scenarios,
+                 f"arena bench: row {i} scenario {row.get('scenario')!r} "
+                 f"not in 'scenarios'")
+        _require(row.get("strategy") in strategies,
+                 f"arena bench: row {i} strategy {row.get('strategy')!r} "
+                 f"not in 'strategies'")
+        cell = (row["scenario"], row["strategy"])
+        _require(cell not in seen, f"arena bench: duplicate cell {cell}")
+        seen.add(cell)
+        for key in ("events", "supersteps", "migrations_total"):
+            _require(isinstance(row.get(key), int) and row[key] >= 0,
+                     f"arena bench: row {i} {key!r} must be a non-negative "
+                     f"int, got {row.get(key)!r}")
+        for key in _ARENA_ROW_NUMS:
+            _num(row, key, i)
+            _require(row[key] >= 0, f"arena bench: row {i} negative {key!r}")
+        _require(0.0 <= row["cut_final"] <= 1.0,
+                 f"arena bench: row {i} cut_final out of [0, 1]")
+    winners = payload.get("winners")
+    _require(isinstance(winners, dict)
+             and set(winners) == set(scenarios),
+             "arena bench: 'winners' must map every scenario")
+    for scn, w in winners.items():
+        _require(isinstance(w, dict) and w, f"arena bench: winners[{scn!r}] "
+                 f"must be a non-empty object")
+        for metric, strat in w.items():
+            _require(strat in strategies,
+                     f"arena bench: winners[{scn!r}][{metric!r}] = "
+                     f"{strat!r} is not a swept strategy")
+
+
+def validate_arena_bench_file(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        payload = json.load(f)
+    validate_arena_bench(payload)
+    return payload
+
+
 def validate_metrics_file(path: str) -> List[Dict[str, Any]]:
     samples: List[Dict[str, Any]] = []
     with open(path) as f:

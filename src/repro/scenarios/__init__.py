@@ -4,7 +4,7 @@ interleaved — Twitter mentions + TunkRank, an adaptively refined FEM mesh,
 and a mobile/cellular call graph with user-movement churn. A ``Scenario``
 is itself a valid ``stream`` for ``DynamicGraphSystem.run``/``compare``."""
 from repro.scenarios.base import Scenario, empty_graph
-from repro.scenarios import cellular, fem, twitter
+from repro.scenarios import adversarial, cellular, fem, twitter
 from repro.scenarios.harness import (CostModel, bsr_snapshot, compare_scenario,
                                      partition_relabelled, run_scenario)
 
@@ -14,9 +14,16 @@ SCENARIOS = {
     "cellular": cellular.build,
 }
 
+# the paper scenarios plus the arena-only adversarial churn stream; the
+# strategy arena iterates this, while SCENARIOS stays the paper's §5.3 set
+ARENA_SCENARIOS = {
+    **SCENARIOS,
+    "adversarial": adversarial.build,
+}
+
 __all__ = [
-    "Scenario", "empty_graph", "SCENARIOS",
+    "Scenario", "empty_graph", "SCENARIOS", "ARENA_SCENARIOS",
     "CostModel", "bsr_snapshot", "compare_scenario", "partition_relabelled",
     "run_scenario",
-    "twitter", "fem", "cellular",
+    "twitter", "fem", "cellular", "adversarial",
 ]

@@ -1,0 +1,91 @@
+"""Adversarial churn stream for the strategy arena (not a paper scenario).
+
+The three §5.3 workloads drift slowly — communities move a few members per
+superstep, so any migrating strategy eventually catches up. This driver is
+built to be hostile to *converged* partitions: vertices belong to
+contiguous-id communities whose boundaries **rotate** through the id space
+every tick (each tick re-assigns a ``stride``-sized slice of every
+community to its neighbour), so the optimal partition is a moving target
+and yesterday's perfect cut decays continuously. A strategy only keeps the
+cut low by migrating forever — exactly the regime where migration volume,
+damping and capacity discipline separate the rivals.
+
+Edges are intra-community with high probability, with a uniform random
+long-range remainder. Heavy-tailed caller activity plus the sliding window
+add arrival/expiry churn on top of the community rotation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.scenarios.base import Scenario, empty_graph
+
+SIZES = {
+    "smoke": dict(n=512, csize=64, n_events=8_000, supersteps=16,
+                  batch_span=64, k=4, a_cap=2048, d_cap=1024, e_cap=8_000,
+                  adapt_iters=6),
+    "small": dict(n=3_000, csize=250, n_events=50_000, supersteps=32,
+                  batch_span=100, k=8, a_cap=8192, d_cap=4096, e_cap=40_000,
+                  adapt_iters=6),
+    "full": dict(n=20_000, csize=1_250, n_events=300_000, supersteps=48,
+                 batch_span=150, k=16, a_cap=16384, d_cap=8192,
+                 e_cap=160_000, adapt_iters=8),
+}
+
+
+def churn_stream(n: int, csize: int, n_events: int, t_end: int,
+                 seed: int = 0, intra_p: float = 0.85,
+                 rotate_frac: float = 0.25, ticks: int = 64,
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Event stream (t, u, v) over rotating contiguous-id communities.
+
+    At tick ``i`` vertex ``v`` belongs to community
+    ``((v + i·stride) mod n) // csize`` with ``stride = rotate_frac·csize``
+    — every tick, a quarter (by default) of each community's membership
+    hands over to the neighbouring community.
+    """
+    rng = np.random.default_rng(seed)
+    stride = max(1, int(round(rotate_frac * csize)))
+    per = max(1, n_events // ticks)
+    dt = max(1, t_end // ticks)
+    times_l, src_l, dst_l = [], [], []
+    for tick in range(ticks):
+        t0 = tick * dt
+        shift = (tick * stride) % n
+        u = (rng.zipf(1.5, per) - 1) % n                 # heavy-tailed talkers
+        comm_u = ((u + shift) % n) // csize
+        # intra-community partner: uniform member of u's current community
+        off = rng.integers(0, csize, per)
+        partner = (comm_u * csize + off - shift) % n
+        v = np.where(rng.random(per) < intra_p, partner,
+                     rng.integers(0, n, per))
+        times_l.append(np.sort(rng.integers(t0, t0 + dt, per)))
+        src_l.append(u)
+        dst_l.append(v)
+    times = np.concatenate(times_l)
+    src = np.concatenate(src_l).astype(np.int64)
+    dst = np.concatenate(dst_l).astype(np.int64)
+    keep = src != dst
+    return times[keep], src[keep], dst[keep]
+
+
+def build(scale: str = "small", seed: int = 0) -> Scenario:
+    p = SIZES[scale]
+    t_end = p["supersteps"] * p["batch_span"]
+    window = 4 * p["batch_span"]
+    times, src, dst = churn_stream(
+        p["n"], p["csize"], p["n_events"], t_end, seed=seed,
+        ticks=2 * p["supersteps"])
+    return Scenario(
+        name="adversarial",
+        program="wcc",
+        graph=empty_graph(p["n"], p["e_cap"]),
+        times=times, src=src, dst=dst,
+        batch_span=p["batch_span"], window=window, k=p["k"],
+        a_cap=p["a_cap"], d_cap=p["d_cap"], adapt_iters=p["adapt_iters"],
+        payload_scale=8.0,
+        seed=seed,
+        notes=f"{p['n']} vertices in {p['n'] // p['csize']} rotating "
+              f"communities (25% membership churn per tick)")

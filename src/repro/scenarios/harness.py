@@ -48,19 +48,23 @@ def run_scenario(scn: Scenario, *, adaptive: bool,
     return system.score(cost=cost, bsr_blk=bsr_blk)
 
 
-def compare_scenario(scn: Scenario, *, max_supersteps: Optional[int] = None,
+def compare_scenario(scn: Scenario, *, strategy: str = "xdgp",
+                     baseline: str = "static",
+                     max_supersteps: Optional[int] = None,
                      bsr_blk: int = 32, cost: Optional[CostModel] = None,
                      seed: Optional[int] = None, backend: str = "auto",
                      cluster: str = "local") -> Dict:
-    """Adaptive vs. static-hash on the identical stream (paper's comparison).
+    """``strategy`` vs. ``baseline`` on the identical stream (with the
+    defaults: the paper's adaptive-vs-static-hash comparison; the strategy
+    arena sweeps ``strategy`` over every canonical registry name).
 
     ``seed`` varies the system's own randomness (placement tie noise,
     migration damping) independently of the stream, which stays pinned to
     the scenario's seed. ``backend`` selects the migration-scoring path
     (DESIGN.md §9), ``cluster`` the execution backend (DESIGN.md §10) —
     bit-identical results whichever way."""
-    system = _system(scn, strategy="xdgp", seed=seed, backend=backend,
+    system = _system(scn, strategy=strategy, seed=seed, backend=backend,
                      cluster=cluster)
-    return system.compare(scn, baseline="static",
+    return system.compare(scn, baseline=baseline,
                           max_supersteps=max_supersteps, bsr_blk=bsr_blk,
                           cost=cost)

@@ -26,9 +26,10 @@ PUBLIC_API = [
     # strategy protocol + registry
     "PartitionStrategy", "StrategyContext",
     "register_strategy", "resolve_strategy", "strategy_names",
+    "canonical_strategy_names",
     # shipped strategies
     "Static", "Hash", "Random", "Modulo", "Block", "Dgr", "Mnn",
-    "OnlineFennel", "XdgpAdaptive",
+    "OnlineFennel", "XdgpAdaptive", "Spinner", "Sdp", "Restream",
     # execution backends
     "ExecutionBackend", "LocalBackend", "ShardedBackend",
     "register_execution_backend", "resolve_execution_backend",

@@ -1,0 +1,278 @@
+"""Registry-wide strategy conformance suite (DESIGN.md §13).
+
+Every canonical strategy in the ``repro.api`` registry is held to the same
+contract, whatever its policy:
+
+  * ``init`` lands every slot label in ``[0, k)``;
+  * adaptation keeps live labels in ``[0, k)``, never touches dead slots,
+    and never grows a partition past ``max(initial occupancy, capacity)``
+    (the capacity invariant — pre-existing overflow may drain, never worsen);
+  * a full session is bit-for-bit deterministic under a fixed seed;
+  * empty / singleton / full-partition graphs don't crash.
+
+The parameterisation is computed from ``canonical_strategy_names()`` at
+import, so registering a new strategy automatically enrols it here — a new
+rival partitioner cannot land without inheriting the whole contract.
+
+The random-graph sweep runs under hypothesis when installed, and under the
+deterministic ``tests/_hypothesis_fallback.py`` sampler otherwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.api import (DynamicGraphSystem, GraphSection, PartitionSection,
+                       StreamSection, SystemConfig, canonical_strategy_names,
+                       empty_graph, resolve_strategy, strategy_names)
+from repro.api.strategy import StrategyContext
+from repro.core.partition_state import make_state, occupancy
+from repro.graph.structure import from_edges
+
+CANONICAL = canonical_strategy_names()
+MIGRATING = tuple(n for n in CANONICAL
+                  if getattr(resolve_strategy(n), "adapts", False))
+
+
+def random_graph(seed: int, n: int = 40, extra_cap: int = 16, e: int = 160):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    m = src != dst
+    return from_edges(src[m], dst[m], num_nodes=n, n_cap=n + extra_cap,
+                      e_cap=2 * e)
+
+
+def adapt_and_converge(name: str, graph, state, k: int, iters: int = 3):
+    strat = resolve_strategy(name)
+    ctx = StrategyContext(k=k, adapt_iters=iters, backend="ref",
+                          max_iters=25, patience=4, record_history=False)
+    state = strat.adapt(graph, state, ctx)
+    state, _ = strat.converge(graph, state, ctx)
+    state, _ = strat.adapt_rounds(graph, state, 2, ctx)
+    return state
+
+
+def check_invariants(graph, state0, state, k: int):
+    nm = np.asarray(graph.node_mask)
+    lab = np.asarray(state.assignment)
+    assert lab.dtype.kind == "i"
+    if nm.any():
+        assert lab[nm].min() >= 0 and lab[nm].max() < k
+    # dead slots are never relabelled by adaptation
+    assert np.array_equal(lab[~nm], np.asarray(state0.assignment)[~nm])
+    # capacity invariant: occupancy never grows past max(initial, capacity)
+    occ0 = np.asarray(occupancy(state0, graph.node_mask))
+    occ = np.asarray(occupancy(state, graph.node_mask))
+    cap = np.asarray(state.capacity)
+    assert np.all(occ <= np.maximum(occ0, cap)), (occ, occ0, cap)
+    assert occ.sum() == nm.sum()
+
+
+# ---------------------------------------------------------------------------
+# registry hygiene (the canonical_strategy_names contract)
+# ---------------------------------------------------------------------------
+
+def test_canonical_names_subset_of_all_names():
+    assert set(CANONICAL) <= set(strategy_names())
+
+
+def test_canonical_names_exclude_aliases():
+    aliases = {"hsh", "rnd", "mod", "blk", "online", "adaptive", "lpa",
+               "lemerrer"}
+    assert aliases <= set(strategy_names())
+    assert not (aliases & set(CANONICAL))
+
+
+def test_canonical_names_unique_factories():
+    # one entry per strategy: resolving an alias and its canonical name
+    # must hit the same factory, and no two canonical names may collide
+    assert len(set(CANONICAL)) == len(CANONICAL)
+    assert type(resolve_strategy("hsh")) is type(resolve_strategy("hash"))
+    assert type(resolve_strategy("adaptive")) is type(resolve_strategy("xdgp"))
+
+
+def test_unknown_strategy_error_lists_aliases_too():
+    with pytest.raises(ValueError) as e:
+        resolve_strategy("definitely-not-registered")
+    msg = str(e.value)
+    assert "registered strategies" in msg
+    for name in ("hsh", "adaptive", "xdgp", "spinner"):
+        assert name in msg
+
+
+def test_rivals_resolvable_by_config_name():
+    for name in ("spinner", "sdp", "restream"):
+        cfg = SystemConfig(graph=GraphSection(n_cap=16, e_cap=16),
+                           partition=PartitionSection(strategy=name, k=2))
+        assert DynamicGraphSystem(config=cfg).strategy.name == name
+
+
+def test_rival_migrators_not_cluster_native():
+    # the sharded backend's cluster engine implements the xDGP step only;
+    # rivals must fall through to their own local hooks
+    assert resolve_strategy("xdgp").cluster_native is True
+    for name in ("spinner", "sdp", "restream", "static", "fennel"):
+        assert resolve_strategy(name).cluster_native is False
+
+
+# ---------------------------------------------------------------------------
+# per-strategy contract (auto-enrols new registrations)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_init_labels_in_range(name):
+    graph = random_graph(1, n=30)
+    k = 4
+    lab = np.asarray(resolve_strategy(name).init(graph, k))
+    assert lab.shape == (graph.n_cap,)
+    assert lab.min() >= 0 and lab.max() < k
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_adaptation_invariants_on_random_graph(name):
+    graph = random_graph(2, n=36)
+    k = 3
+    strat = resolve_strategy(name)
+    state0 = make_state(graph, strat.init(graph, k), k, seed=7)
+    state = adapt_and_converge(name, graph, state0, k)
+    check_invariants(graph, state0, state, k)
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_session_deterministic_under_fixed_seed(name):
+    rng = np.random.default_rng(11)
+    n, events = 48, 240
+    times = np.sort(rng.integers(0, 120, events))
+    src = rng.integers(0, n, events)
+    dst = (src + 1 + rng.integers(0, n - 1, events)) % n
+    stream = (times, src, dst)
+    cfg = SystemConfig(
+        graph=GraphSection(n_cap=64, e_cap=600),
+        stream=StreamSection(window=60, batch_span=20, a_cap=256, d_cap=128),
+        partition=PartitionSection(strategy=name, k=3, adapt_iters=2),
+        seed=5)
+
+    def final_assignment():
+        system = DynamicGraphSystem(config=cfg)
+        system.run(stream)
+        return np.asarray(system.state.assignment)
+
+    assert np.array_equal(final_assignment(), final_assignment())
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_empty_graph_does_not_crash(name):
+    graph = empty_graph(8, 8)
+    k = 2
+    strat = resolve_strategy(name)
+    state0 = make_state(graph, strat.init(graph, k), k, seed=0)
+    state = adapt_and_converge(name, graph, state0, k)
+    check_invariants(graph, state0, state, k)
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_singleton_graph_does_not_crash(name):
+    graph = from_edges(np.array([], np.int64), np.array([], np.int64),
+                       num_nodes=1, n_cap=4, e_cap=4)
+    k = 2
+    strat = resolve_strategy(name)
+    state0 = make_state(graph, strat.init(graph, k), k, seed=0)
+    state = adapt_and_converge(name, graph, state0, k)
+    check_invariants(graph, state0, state, k)
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_full_partition_does_not_overflow(name):
+    # everyone starts in partition 0 and partition 0 is exactly full:
+    # adaptation may only drain it, and may not overfill the others
+    import jax.numpy as jnp
+    graph = random_graph(3, n=24)
+    k = 3
+    n_live = int(np.asarray(graph.node_mask).sum())
+    assignment = jnp.zeros((graph.n_cap,), jnp.int32)
+    capacity = jnp.asarray([n_live, n_live, n_live], jnp.int32)
+    state0 = make_state(graph, assignment, k, seed=1, capacity=capacity)
+    state = adapt_and_converge(name, graph, state0, k)
+    check_invariants(graph, state0, state, k)
+
+
+# ---------------------------------------------------------------------------
+# random-graph sweep (hypothesis, or the deterministic fallback sampler)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2 ** 20), st.sampled_from(MIGRATING),
+       st.integers(2, 5))
+def test_migrating_strategies_hold_invariants(seed, name, k):
+    graph = random_graph(seed, n=20 + seed % 17, e=90)
+    strat = resolve_strategy(name)
+    state0 = make_state(graph, strat.init(graph, k), k, seed=seed)
+    ctx = StrategyContext(k=k, adapt_iters=2, backend="ref",
+                          max_iters=10, patience=3, record_history=False)
+    state = strat.adapt(graph, state0, ctx)
+    state, _ = strat.converge(graph, state, ctx)
+    check_invariants(graph, state0, state, k)
+
+
+# ---------------------------------------------------------------------------
+# arena result contract (results/bench_strategy_arena.json)
+# ---------------------------------------------------------------------------
+
+def _arena_payload():
+    row = lambda scn, strat: {
+        "scenario": scn, "strategy": strat, "events": 10, "supersteps": 2,
+        "cut_final": 0.3, "cut_mean": 0.35, "imbalance_final": 1.1,
+        "migrations_total": 5, "wall_seconds": 0.2, "exec_cost_total": 9.0,
+    }
+    return {
+        "bench": "strategy_arena",
+        "scenarios": ["twitter", "adversarial"],
+        "strategies": ["xdgp", "spinner"],
+        "rows": [row(s, t) for s in ("twitter", "adversarial")
+                 for t in ("xdgp", "spinner")],
+        "winners": {"twitter": {"cut": "spinner"},
+                    "adversarial": {"cut": "xdgp"}},
+    }
+
+
+def test_arena_bench_schema_validates():
+    import json as _json
+    from repro.obs.schema import SchemaError, validate_arena_bench
+    good = _arena_payload()
+    validate_arena_bench(good)
+    for mutate in (
+        lambda d: d.update(bench="other"),
+        lambda d: d.update(strategies=["xdgp", "adaptive", "spinner"]),
+        lambda d: d["rows"].pop(),                    # missing cell
+        lambda d: d["rows"].__setitem__(1, d["rows"][0]),   # duplicate cell
+        lambda d: d["rows"][0].update(cut_final=1.5),
+        lambda d: d["rows"][0].update(migrations_total=-1),
+        lambda d: d["winners"].pop("twitter"),
+        lambda d: d["winners"]["twitter"].update(cut="static"),
+    ):
+        bad = _json.loads(_json.dumps(good))
+        mutate(bad)
+        with pytest.raises(SchemaError):
+            validate_arena_bench(bad)
+
+
+def test_committed_arena_results_validate():
+    import os
+    from repro.obs.schema import validate_arena_bench_file
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results", "bench_strategy_arena.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed arena results")
+    payload = validate_arena_bench_file(path)
+    # the acceptance bar: every rival sweeps every paper scenario plus the
+    # adversarial stream, against the committed canonical-name roster
+    assert {"spinner", "sdp", "restream", "xdgp"} <= set(payload["strategies"])
+    assert set(payload["scenarios"]) >= {"twitter", "fem", "cellular",
+                                         "adversarial"}
+    assert set(payload["strategies"]) <= set(CANONICAL)
