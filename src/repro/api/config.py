@@ -47,10 +47,29 @@ from typing import Any, Dict, Optional
 
 @dataclasses.dataclass(frozen=True)
 class GraphSection:
-    """Slot capacities used when no initial ``Graph`` is supplied."""
+    """How the session gets its graph when none is supplied.
 
-    n_cap: int = 0                 # vertex slots (0 = a graph must be passed)
-    e_cap: int = 0                 # edge slots
+    Two modes: bare capacities (``n_cap``/``e_cap``) build an empty graph a
+    stream grows from nothing (the original behaviour), while a
+    ``generator`` name builds a starting graph through the scale tier's
+    streaming generators (``repro.scale``, DESIGN.md §14) — chunked, with
+    deterministic per-chunk seeding from the session seed.
+    """
+
+    n_cap: int = 0                 # vertex slots (0 = a graph must be passed,
+                                   # or = generator's n when one is named)
+    e_cap: int = 0                 # edge slots (generator mode: 0 = generated
+                                   # edges + 25% streaming head-room)
+    generator: Optional[str] = None  # scale-tier generator name
+                                   # ("rmat" | "kronecker" | "chung_lu")
+    n: int = 0                     # generator vertex count
+    avg_degree: float = 8.0        # generator target average degree
+    chunk_edges: int = 262144      # edges per generated/packed chunk
+
+    def __post_init__(self):
+        if self.generator is not None and self.n < 2:
+            raise ValueError(f"graph.generator={self.generator!r} needs "
+                             f"graph.n >= 2 vertices, got {self.n}")
 
 
 @dataclasses.dataclass(frozen=True)

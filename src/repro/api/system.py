@@ -177,10 +177,18 @@ class DynamicGraphSystem:
         """
         self.config = cfg = config if config is not None else SystemConfig()
         if graph is None:
-            if cfg.graph.n_cap <= 0 or cfg.graph.e_cap <= 0:
-                raise ValueError("pass an initial graph or set config.graph "
-                                 "n_cap/e_cap so the session can build one")
-            graph = empty_graph(cfg.graph.n_cap, cfg.graph.e_cap)
+            if cfg.graph.generator is not None:
+                # scale tier (DESIGN.md §14): build the starting graph from
+                # a streaming generator, chunked, seeded from the session
+                from repro.scale import session_graph
+                graph = session_graph(cfg.graph, seed=cfg.seed)
+            elif cfg.graph.n_cap <= 0 or cfg.graph.e_cap <= 0:
+                raise ValueError("pass an initial graph, set config.graph "
+                                 "n_cap/e_cap so the session can build an "
+                                 "empty one, or name a config.graph "
+                                 "generator to synthesise one")
+            else:
+                graph = empty_graph(cfg.graph.n_cap, cfg.graph.e_cap)
         p = cfg.partition
         self.strategy = resolve_strategy(strategy if strategy is not None
                                          else p.strategy)

@@ -415,11 +415,32 @@ def make_distributed_migrator(mesh: jax.sharding.Mesh, dg: DistGraph, k: int,
 # ---------------------------------------------------------------------------
 
 
+def rank_key_dtype(k: int, n_cap: int):
+    """The narrowest dtype the quota ranking's packed ``group·n_cap +
+    orig_id`` keys fit in — int32 while they fit (the historical layout,
+    byte-identical on the wire), uint32 out to ~4.3e9 key values (k=8 at
+    ~66M vertices without needing x64), int64 beyond that when JAX x64 is
+    enabled.  Fails loudly instead of wrapping: a silently aliased key
+    would merge two (src, dst) quota groups and admit the wrong movers."""
+    span = (k * k) * n_cap + n_cap       # strict upper bound on any key
+    if span < 2 ** 31:
+        return jnp.int32
+    if span < 2 ** 32:
+        return jnp.uint32
+    if span < 2 ** 63 and jax.dtypes.canonicalize_dtype(jnp.int64) == jnp.int64:
+        return jnp.int64
+    raise OverflowError(
+        f"quota rank keys span {span} values (k={k}, n_cap={n_cap}), which "
+        f"overflows uint32 and JAX x64 is disabled — enable jax_enable_x64 "
+        f"or reduce n_cap")
+
+
 def cluster_migrate_shard(assignment_blk: jax.Array, pending_blk: jax.Array,
                           noise_blk: jax.Array, gate_blk: jax.Array,
                           orig_blk: jax.Array, dg_local: DistGraph,
                           capacity: jax.Array, *, k: int, halo_size: int,
                           n_cap: int, tie_break: str, axis: str = AXIS,
+                          key_dtype=jnp.int32,
                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                      jax.Array, jax.Array]:
     """One adaptive iteration per device block — decision-identical to the
@@ -489,13 +510,16 @@ def cluster_migrate_shard(assignment_blk: jax.Array, pending_blk: jax.Array,
     src_part = jnp.clip(assignment_blk, 0, k - 1)
     tgt_safe = jnp.clip(target, 0, k - 1)
     group = src_part * k + tgt_safe
-    big = jnp.iinfo(jnp.int32).max
-    key = jnp.where(willing, group * n_cap + orig_blk, big)
+    # keys pack (src, dst, orig slot) into one integer; the dtype is chosen
+    # by rank_key_dtype so the packing can never silently wrap at scale
+    big = jnp.iinfo(key_dtype).max
+    group_base = group.astype(key_dtype) * jnp.asarray(n_cap, key_dtype)
+    key = jnp.where(willing, group_base + orig_blk.astype(key_dtype), big)
     all_keys = jnp.sort(jax.lax.all_gather(key, axis, tiled=True))
     # rank within (i, j) group in original slot order: position of my key
     # among all active keys minus the position where my group begins
     rank = (jnp.searchsorted(all_keys, key)
-            - jnp.searchsorted(all_keys, group * n_cap)).astype(jnp.int32)
+            - jnp.searchsorted(all_keys, group_base)).astype(jnp.int32)
     admitted = willing & (rank < quota[tgt_safe])
     n_admitted = jax.lax.psum(jnp.sum(admitted).astype(jnp.int32), axis)
 
@@ -521,7 +545,8 @@ def layout_device_arrays(layout: BlockLayout
 
 
 def make_cluster_step(mesh: jax.sharding.Mesh, *, k: int, n_cap: int,
-                      tie_break: str = "random", axis: str = AXIS):
+                      tie_break: str = "random", axis: str = AXIS,
+                      key_dtype=None):
     """jit'd parity migration step over the mesh (k == P required).
 
     Returns ``step(assignment, pending, rng, capacity, s, dg, blk_live,
@@ -548,8 +573,8 @@ def make_cluster_step(mesh: jax.sharding.Mesh, *, k: int, n_cap: int,
                          f"equal the device count ({k} != {P})")
     if tie_break not in ("random", "stay"):
         raise ValueError(f"unknown tie_break {tie_break!r}")
-    if (k * k) * n_cap + n_cap >= 2 ** 31:
-        raise ValueError(f"rank keys overflow int32: k={k}, n_cap={n_cap}")
+    if key_dtype is None:       # widen past int32 as n_cap·k² grows; the
+        key_dtype = rank_key_dtype(k, n_cap)   # ranks are dtype-invariant
     spec_n = jax.sharding.PartitionSpec(axis)
     spec_r = jax.sharding.PartitionSpec()
     dg_specs = DistGraph(*([spec_n] * 8))
@@ -576,7 +601,7 @@ def make_cluster_step(mesh: jax.sharding.Mesh, *, k: int, n_cap: int,
         gate_blk = jax.random.bernoulli(sub, p=s, shape=(n_cap,))[orig_safe]
         f = shard_map(
             partial(cluster_migrate_shard, k=k, halo_size=halo, n_cap=n_cap,
-                    tie_break=tie_break, axis=axis),
+                    tie_break=tie_break, axis=axis, key_dtype=key_dtype),
             mesh=mesh,
             in_specs=(spec_n, spec_n, spec_n, spec_n, spec_n, dg_specs,
                       spec_r),

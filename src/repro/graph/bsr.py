@@ -17,6 +17,23 @@ import jax.numpy as jnp
 
 from repro.graph.structure import Graph
 
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def check_int32_index(value: int, what: str) -> int:
+    """Fail-loud overflow guard for indices stored in int32 containers
+    (``row_ptr``, ``block_cols``, ``nnzb``).  At the 10M-vertex tier these
+    quantities approach 2^31; silently wrapping would corrupt the packing,
+    so any consumer that is about to stuff ``value`` into an int32 slot
+    calls this first (DESIGN.md §14 overflow policy)."""
+    value = int(value)
+    if value > _INT32_MAX:
+        raise OverflowError(
+            f"{what} = {value} overflows int32 (max {_INT32_MAX}); "
+            f"the BSR packing stores this in an int32 container — shrink "
+            f"the graph or raise the block size")
+    return value
+
 
 class BSRMatrix(NamedTuple):
     """Padded BSR. n_rows = n_cols = n_blocks * blk.
@@ -68,6 +85,9 @@ def graph_to_bsr(graph: Graph, blk: int = 128, normalize: Optional[str] = None,
     key = br * (n_pad // blk) + bc
     uniq, tile_of = np.unique(key, return_inverse=True)
     nnzb = uniq.shape[0]
+    # row_ptr/block_cols/nnzb live in int32 containers: guard before packing
+    check_int32_index(n_pad // blk, "n_blocks (tile rows)")
+    check_int32_index(nnzb, "nnzb (nonzero tile count)")
     cap = int(nnzb_cap if nnzb_cap is not None else max(nnzb, 1))
     if cap < nnzb:
         raise ValueError(f"nnzb_cap {cap} < required {nnzb}")

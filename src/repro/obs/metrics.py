@@ -229,13 +229,18 @@ _RECORD_HISTOGRAMS = ("ingest_seconds", "step_seconds", "compute_seconds")
 def record_superstep(reg: MetricsRegistry, record: Any,
                      **labels: Any) -> None:
     """Fold one ``SuperstepRecord`` into the registry (counters for the
-    accumulating fields, gauges for state, histograms for phase seconds)."""
+    accumulating fields, gauges for state, histograms for phase seconds),
+    plus the process memory high-water mark — per superstep, so a scrape of
+    a long-running session shows whether host memory is staying bounded
+    while the graph grows (DESIGN.md §14)."""
     for f in _RECORD_COUNTERS:
         reg.counter(f"{f}_total").inc(getattr(record, f), **labels)
     for f in _RECORD_GAUGES:
         reg.gauge(f).set(getattr(record, f), **labels)
     for f in _RECORD_HISTOGRAMS:
         reg.histogram(f).observe(getattr(record, f), **labels)
+    from repro.obs.profiling import peak_rss_bytes
+    reg.gauge("peak_rss_bytes").set(peak_rss_bytes(), **labels)
 
 
 def record_cluster(reg: MetricsRegistry,

@@ -18,6 +18,7 @@ Two complementary views of the fused migration kernels
 from __future__ import annotations
 
 import contextlib
+import sys
 from typing import Any, Dict, Iterator, Optional
 
 import numpy as np
@@ -58,6 +59,48 @@ def kernel_profile(logdir: Optional[str],
             jax.profiler.stop_trace()
         except Exception as e:                       # pragma: no cover
             status["error"] = repr(e)
+
+
+def _proc_status_kb(field: str) -> Optional[int]:
+    """One ``/proc/self/status`` field in kB (Linux; None elsewhere)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith(field + ":"):
+                    return int(line.split()[1])
+    except OSError:
+        pass
+    return None
+
+
+def current_rss_bytes() -> Optional[int]:
+    """Resident set size right now (``VmRSS``); None off-Linux."""
+    kb = _proc_status_kb("VmRSS")
+    return None if kb is None else kb * 1024
+
+
+def peak_rss_bytes() -> int:
+    """Peak resident set size of this process, in bytes.
+
+    The scale tier's headline memory number (DESIGN.md §14): a monotonic
+    high-water mark, so a bounded-memory claim holds iff this stays flat
+    while |V| grows.  Source: ``VmHWM`` from ``/proc/self/status`` where
+    available, else ``getrusage`` (kB on Linux, bytes on macOS)."""
+    kb = _proc_status_kb("VmHWM")
+    if kb is not None:
+        return kb * 1024
+    try:
+        import resource
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        return int(peak if sys.platform == "darwin" else peak * 1024)
+    except Exception:                                # pragma: no cover
+        return 0
+
+
+def memory_probe() -> Dict[str, Any]:
+    """One host-memory sample for manifests and per-row bench records."""
+    return {"peak_rss_bytes": peak_rss_bytes(),
+            "current_rss_bytes": current_rss_bytes()}
 
 
 def _live_edges(graph: Any) -> int:

@@ -230,6 +230,91 @@ def validate_arena_bench_file(path: str) -> Dict[str, Any]:
     return payload
 
 
+_SCALE_ROW_NUMS = ("build_seconds", "ingest_events_per_sec",
+                   "superstep_seconds", "adapt_seconds",
+                   "cut_before", "cut_after")
+
+
+def validate_scale_bench(payload: Dict[str, Any]) -> None:
+    """The scale-sweep result contract (results/bench_scale_sweep.json,
+    DESIGN.md §14): one row per (vertices, backend) cell — full cross
+    product — recording end-to-end build / ingest / adapt timings and the
+    host-memory high-water mark, plus the chunked-BSR outcome (packed
+    stats, or the budget refusal that bounded memory).  CI re-validates
+    both a fresh smoke sweep and the committed million-vertex artifact."""
+    _require(isinstance(payload, dict), "scale bench: not an object")
+    _require(payload.get("bench") == "scale_sweep",
+             f"scale bench: 'bench' must be 'scale_sweep', "
+             f"got {payload.get('bench')!r}")
+    _require(isinstance(payload.get("generator"), str) and payload["generator"],
+             "scale bench: 'generator' must name the edge stream")
+    for key in ("k", "chunk_edges"):
+        _require(isinstance(payload.get(key), int) and payload[key] >= 1,
+                 f"scale bench: {key!r} must be a positive int, "
+                 f"got {payload.get(key)!r}")
+    sizes = payload.get("sizes")
+    _require(isinstance(sizes, list) and sizes
+             and all(isinstance(s, int) and s > 0 for s in sizes)
+             and len(set(sizes)) == len(sizes),
+             "scale bench: 'sizes' must be distinct positive vertex counts")
+    backends = payload.get("backends")
+    _require(isinstance(backends, list) and backends
+             and all(isinstance(b, str) and b for b in backends)
+             and len(set(backends)) == len(backends),
+             "scale bench: 'backends' must be distinct backend names")
+    rows = payload.get("rows")
+    _require(isinstance(rows, list), "scale bench: 'rows' must be a list")
+    _require(len(rows) == len(sizes) * len(backends),
+             f"scale bench: expected {len(sizes) * len(backends)} rows "
+             f"(full size x backend cross product), got "
+             f"{len(rows) if isinstance(rows, list) else rows!r}")
+    seen = set()
+    for i, row in enumerate(rows):
+        _require(isinstance(row, dict), f"scale bench: row {i} not an object")
+        _require(row.get("vertices") in sizes,
+                 f"scale bench: row {i} vertices {row.get('vertices')!r} "
+                 f"not in 'sizes'")
+        _require(row.get("backend") in backends,
+                 f"scale bench: row {i} backend {row.get('backend')!r} "
+                 f"not in 'backends'")
+        cell = (row["vertices"], row["backend"])
+        _require(cell not in seen, f"scale bench: duplicate cell {cell}")
+        seen.add(cell)
+        for key in ("edges", "events", "supersteps", "migrations",
+                    "peak_rss_bytes"):
+            _require(isinstance(row.get(key), int) and row[key] >= 0,
+                     f"scale bench: row {i} {key!r} must be a non-negative "
+                     f"int, got {row.get(key)!r}")
+        _require(row["edges"] > 0 and row["peak_rss_bytes"] > 0,
+                 f"scale bench: row {i} edges/peak_rss_bytes must be "
+                 f"positive (an empty run measures nothing)")
+        for key in _SCALE_ROW_NUMS:
+            _num(row, key, i)
+            _require(row[key] >= 0, f"scale bench: row {i} negative {key!r}")
+        for key in ("cut_before", "cut_after"):
+            _require(0.0 <= row[key] <= 1.0,
+                     f"scale bench: row {i} {key!r} out of [0, 1]")
+        bsr = row.get("bsr")
+        _require(isinstance(bsr, dict), f"scale bench: row {i} 'bsr' must "
+                 f"be an object (packed stats or a budget refusal)")
+        if "skipped" in bsr:
+            _require(isinstance(bsr["skipped"], str) and bsr["skipped"],
+                     f"scale bench: row {i} bsr 'skipped' needs a reason")
+        else:
+            for key in ("nnzb", "blocks_bytes"):
+                _require(isinstance(bsr.get(key), int) and bsr[key] >= 0,
+                         f"scale bench: row {i} bsr {key!r} must be a "
+                         f"non-negative int, got {bsr.get(key)!r}")
+            _num(bsr, "build_seconds", i)
+
+
+def validate_scale_bench_file(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        payload = json.load(f)
+    validate_scale_bench(payload)
+    return payload
+
+
 def validate_metrics_file(path: str) -> List[Dict[str, Any]]:
     samples: List[Dict[str, Any]] = []
     with open(path) as f:

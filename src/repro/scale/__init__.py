@@ -1,0 +1,59 @@
+"""Scale tier: streaming generators + chunked BSR construction so the
+system reaches 1M–10M vertices with bounded host memory (DESIGN.md §14).
+
+Entry points:
+
+* ``make_edge_stream(name, n, ...)`` — registered streaming generators
+  ("rmat"/"kronecker", "chung_lu") yielding deterministic edge chunks.
+* ``stream_to_graph(stream)``        — chunk-wise dedup into a padded
+  ``Graph``, bit-compatible with ``from_edges``.
+* ``graph_to_bsr_chunked(graph)``    — two-pass count-then-fill BSR
+  packing, bit-identical to ``graph_to_bsr``, with a ``memory_budget``.
+* ``session_graph(section, seed)``   — the ``SystemConfig.graph`` wiring:
+  a generator-named section builds its own starting graph.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.scale.chunked_bsr import (MemoryBudgetError, graph_to_bsr_chunked,
+                                     iter_edge_chunks)
+from repro.scale.generators import (ChungLuStream, EdgeChunkStream,
+                                    RmatStream, SCALE_GENERATORS, chunk_rng,
+                                    make_edge_stream, stream_events,
+                                    stream_to_graph)
+
+__all__ = [
+    "ChungLuStream", "EdgeChunkStream", "MemoryBudgetError", "RmatStream",
+    "SCALE_GENERATORS", "chunk_rng", "graph_to_bsr_chunked",
+    "iter_edge_chunks", "make_edge_stream", "session_graph", "stream_events",
+    "stream_to_graph",
+]
+
+
+def session_graph(section, seed: int = 0):
+    """Build the starting ``Graph`` a ``SystemConfig.graph`` section with a
+    ``generator`` name describes (``DynamicGraphSystem`` calls this when no
+    explicit graph is passed).
+
+    Capacities: ``n_cap`` defaults to the generator's ``n``; ``e_cap``
+    defaults to 25% head-room over the generated live edges so a stream
+    can still grow the graph.  Explicit caps win (and are validated).
+    """
+    stream = make_edge_stream(section.generator, section.n,
+                              avg_degree=section.avg_degree,
+                              chunk_edges=section.chunk_edges, seed=seed)
+    n_cap: Optional[int] = section.n_cap if section.n_cap > 0 else None
+    if section.e_cap > 0:
+        return stream_to_graph(stream, n_cap=n_cap, e_cap=section.e_cap)
+    graph = stream_to_graph(stream, n_cap=n_cap)     # e_cap = exact live
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.graph.structure import Graph
+    pad = int(graph.e_cap * 0.25) + 16               # stream head-room
+    fill = jnp.asarray(np.full((pad,), -1, np.int32))
+    false = jnp.asarray(np.zeros((pad,), bool))
+    return Graph(src=jnp.concatenate([graph.src, fill]),
+                 dst=jnp.concatenate([graph.dst, fill]),
+                 node_mask=graph.node_mask,
+                 edge_mask=jnp.concatenate([graph.edge_mask, false]))

@@ -1,0 +1,237 @@
+"""Streaming graph generators for the million-vertex scale tier
+(DESIGN.md §14).
+
+The smoke-scale generators (``graph.generators``, ``scenarios/``) build the
+whole edge list in one array — fine at 100k edges, hostile at 100M.  This
+module generates edges as **chunks**: each generator is an indexable stream
+of ``(src, dst)`` int64 arrays where chunk ``i`` is a pure function of
+``(seed, i)`` via ``np.random.SeedSequence(entropy=(seed, TAG, i))``.  That
+buys three properties the scale tier needs:
+
+* bounded memory — nothing ever materialises the full edge list; peak host
+  state is one chunk plus whatever the consumer accumulates;
+* deterministic replay — any chunk can be regenerated independently (same
+  seed ⇒ bit-identical stream), so a consumer can re-stream for a second
+  pass instead of caching;
+* no per-event Python state — every chunk is a single vectorized draw
+  (ROADMAP: "the ingest path must never materialize O(|V|²) or per-event
+  Python state").
+
+Two families, both power-law by construction:
+
+* ``RmatStream``   — recursive-matrix / stochastic-Kronecker sampling
+  (Chakrabarti et al.; the graph500 generator family): each edge picks one
+  of four quadrants per bit level, vectorized as ``levels`` independent
+  Bernoulli draws over the whole chunk.
+* ``ChungLuStream`` — Chung-Lu with Pareto weights: endpoints are drawn
+  from the weight distribution via one ``searchsorted`` per chunk, giving
+  an expected-degree power law with an exact O(n) setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterator, Optional, Tuple, Type
+
+import numpy as np
+
+# SeedSequence entropy tags: keep the per-chunk streams and the one-off
+# weight draw in provably disjoint entropy pools
+_TAG_CHUNK = 0x5CA1E
+_TAG_WEIGHTS = 0x5CA1F
+
+
+def chunk_rng(seed: int, chunk_idx: int) -> np.random.Generator:
+    """The per-chunk RNG: a pure function of (seed, chunk index)."""
+    ss = np.random.SeedSequence(entropy=(int(seed), _TAG_CHUNK, int(chunk_idx)))
+    return np.random.default_rng(ss)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeChunkStream:
+    """Base class: a deterministic, indexable stream of edge chunks.
+
+    ``chunk(i)`` returns ``(src, dst)`` int64 arrays (self-loops already
+    dropped, so chunk sizes vary slightly below ``chunk_edges``).  Iterating
+    yields every chunk in order; iterating twice replays the same stream.
+    """
+
+    n: int                     # vertex-id space [0, n)
+    num_edges: int             # nominal emitted edges across the stream
+    chunk_edges: int = 1 << 18 # emitted edges per chunk (pre self-loop drop)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n < 2:
+            raise ValueError(f"need n >= 2 vertices, got {self.n}")
+        if self.num_edges < 1:
+            raise ValueError(f"need num_edges >= 1, got {self.num_edges}")
+        if self.chunk_edges < 1:
+            raise ValueError(f"need chunk_edges >= 1, got {self.chunk_edges}")
+
+    @property
+    def num_chunks(self) -> int:
+        return -(-self.num_edges // self.chunk_edges)
+
+    def _chunk_size(self, i: int) -> int:
+        if not 0 <= i < self.num_chunks:
+            raise IndexError(f"chunk {i} out of range [0, {self.num_chunks})")
+        return min(self.chunk_edges, self.num_edges - i * self.chunk_edges)
+
+    def chunk(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        for i in range(self.num_chunks):
+            yield self.chunk(i)
+
+
+@dataclasses.dataclass(frozen=True)
+class RmatStream(EdgeChunkStream):
+    """RMAT / stochastic-Kronecker edges (a=0.57 b=0.19 c=0.19 d=0.05 ≈
+    the graph500 parameterisation).  Each edge descends ``ceil(log2 n)``
+    quadrant levels; the descent is vectorized as one uniform draw per
+    level over the whole chunk.  Ids land in [0, 2^levels) and are folded
+    into [0, n) by modulo — the standard dense-id fold; the distribution
+    tail is unaffected.
+    """
+
+    a: float = 0.57
+    b: float = 0.19
+    c: float = 0.19
+    d: float = 0.05
+
+    def __post_init__(self):
+        super().__post_init__()
+        total = self.a + self.b + self.c + self.d
+        if not math.isclose(total, 1.0, rel_tol=1e-9):
+            raise ValueError(f"RMAT quadrant probs must sum to 1, got {total}")
+
+    @property
+    def levels(self) -> int:
+        return max(1, int(math.ceil(math.log2(self.n))))
+
+    def chunk(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        size = self._chunk_size(i)
+        rng = chunk_rng(self.seed, i)
+        u = rng.random((self.levels, size))
+        # quadrant layout per level:  (row, col) bit =
+        #   (0,0) w.p. a | (0,1) w.p. b | (1,0) w.p. c | (1,1) w.p. d
+        row_bit = u >= (self.a + self.b)
+        col_bit = np.where(row_bit, u >= (self.a + self.b + self.c),
+                           u >= self.a)
+        weights = (np.int64(1) << np.arange(self.levels, dtype=np.int64))
+        src = (row_bit.astype(np.int64) * weights[:, None]).sum(axis=0)
+        dst = (col_bit.astype(np.int64) * weights[:, None]).sum(axis=0)
+        src %= self.n
+        dst %= self.n
+        keep = src != dst
+        return src[keep], dst[keep]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChungLuStream(EdgeChunkStream):
+    """Chung-Lu power-law edges: vertex weights ``w_v ~ Pareto(gamma-1)``,
+    endpoints drawn proportionally to weight.  The weight vector is the
+    only O(n) state and is drawn once from its own entropy pool; per-chunk
+    sampling is two uniform draws + two ``searchsorted`` calls.
+    """
+
+    gamma: float = 2.5         # degree-distribution exponent p(d) ~ d^-gamma
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.gamma <= 1.0:
+            raise ValueError(f"need gamma > 1 for a normalisable power law, "
+                             f"got {self.gamma}")
+        ss = np.random.SeedSequence(entropy=(int(self.seed), _TAG_WEIGHTS))
+        rng = np.random.default_rng(ss)
+        w = rng.pareto(self.gamma - 1.0, size=self.n) + 1.0
+        cdf = np.cumsum(w)
+        cdf /= cdf[-1]
+        object.__setattr__(self, "_cdf", cdf)
+
+    def chunk(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        size = self._chunk_size(i)
+        rng = chunk_rng(self.seed, i)
+        src = np.searchsorted(self._cdf, rng.random(size)).astype(np.int64)
+        dst = np.searchsorted(self._cdf, rng.random(size)).astype(np.int64)
+        keep = src != dst
+        return src[keep], dst[keep]
+
+
+# registry: config-facing names → stream classes ("kronecker" is the RMAT
+# synonym — RMAT *is* a stochastic Kronecker generator)
+SCALE_GENERATORS: Dict[str, Type[EdgeChunkStream]] = {
+    "rmat": RmatStream,
+    "kronecker": RmatStream,
+    "chung_lu": ChungLuStream,
+    "chunglu": ChungLuStream,
+}
+
+
+def make_edge_stream(name: str, n: int, *, avg_degree: float = 8.0,
+                     chunk_edges: int = 1 << 18, seed: int = 0,
+                     **params) -> EdgeChunkStream:
+    """Build a registered generator sized for ``avg_degree`` (emitted edges
+    = n·avg_degree/2; dedup in the graph builder trims this slightly)."""
+    cls = SCALE_GENERATORS.get(name)
+    if cls is None:
+        raise ValueError(f"unknown scale generator {name!r}; "
+                         f"valid: {sorted(SCALE_GENERATORS)}")
+    num_edges = max(1, int(round(n * avg_degree / 2.0)))
+    return cls(n=n, num_edges=num_edges, chunk_edges=chunk_edges, seed=seed,
+               **params)
+
+
+def stream_to_graph(stream: EdgeChunkStream,
+                    n_cap: Optional[int] = None,
+                    e_cap: Optional[int] = None) -> "Graph":
+    """Accumulate a chunk stream into a padded ``Graph``, dedup'd chunk by
+    chunk.
+
+    Bit-compatible with ``from_edges`` over the concatenated stream: both
+    dedup through the same sorted ``lo·n + hi`` int64 key set, so the edge
+    order in the packed arrays is identical.  Peak host state is the sorted
+    key set (8 bytes per unique edge) plus one chunk — never the emitted
+    multi-edge list.
+    """
+    from repro.graph.structure import Graph  # local import: keep the
+    import jax.numpy as jnp                  # generators importable alone
+
+    n = stream.n
+    keys = np.empty((0,), np.int64)
+    for src, dst in stream:
+        lo = np.minimum(src, dst)
+        hi = np.maximum(src, dst)
+        keys = np.union1d(keys, lo * np.int64(n) + hi)
+    lo = (keys // n).astype(np.int32)
+    hi = (keys % n).astype(np.int32)
+    e = lo.shape[0]
+    n_cap = int(n_cap if n_cap is not None else n)
+    e_cap = int(e_cap if e_cap is not None else e)
+    if n_cap < n or e_cap < e:
+        raise ValueError(f"capacity too small: n_cap={n_cap}<{n} "
+                         f"or e_cap={e_cap}<{e}")
+    s = np.full((e_cap,), -1, np.int32)
+    d = np.full((e_cap,), -1, np.int32)
+    s[:e], d[:e] = lo, hi
+    nm = np.zeros((n_cap,), bool)
+    nm[:n] = True
+    em = np.zeros((e_cap,), bool)
+    em[:e] = True
+    return Graph(src=jnp.asarray(s), dst=jnp.asarray(d),
+                 node_mask=jnp.asarray(nm), edge_mask=jnp.asarray(em))
+
+
+def stream_events(stream: EdgeChunkStream, t0: int = 0,
+                  span_per_chunk: int = 1) -> Iterator[np.ndarray]:
+    """Adapt a chunk stream into ``(t, u, v)`` event batches for
+    ``DynamicGraphSystem.step`` — chunk ``i`` gets timestamps in
+    ``[t0 + i·span, t0 + (i+1)·span)``, evenly spread, so windowed ingest
+    sees a moving clock without any per-event Python state."""
+    for i, (src, dst) in enumerate(stream):
+        m = src.shape[0]
+        lo = t0 + i * span_per_chunk
+        t = lo + (np.arange(m, dtype=np.int64) * span_per_chunk) // max(m, 1)
+        yield np.stack([t, src, dst], axis=1)

@@ -361,6 +361,11 @@ class GraphServer:
             m.gauge("partitions").set(t.system.config.partition.k, tenant=name)
             self._autoscale(t, rec)
             out[name] = rec
+        # host-memory high-water mark, refreshed every scheduling round so a
+        # scrape of a long-running server shows whether memory stays bounded
+        from repro.obs.profiling import peak_rss_bytes
+        self.metrics.gauge("peak_rss_bytes",
+                           "process peak RSS").set(peak_rss_bytes())
         pol = self.checkpoint_policy
         if pol.directory and pol.every and self.tick_count % pol.every == 0:
             self.save_checkpoint()

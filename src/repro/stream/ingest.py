@@ -20,8 +20,9 @@ boundary, and the output (``GraphDelta``) is the only thing that crosses it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Iterator, NamedTuple, Optional, Tuple
+from typing import Deque, Iterator, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -73,19 +74,28 @@ class EdgeStreamBuffer:
 
     Same contract as the seed ``ChangeQueue`` (append changes, drain up to
     ``a_cap``/``d_cap`` per superstep, leftovers stay queued). Pushes append
-    whole chunks to a Python list — O(1) per push, whether the chunk is one
-    event (seed-compat API) or a full batch — and a drain consolidates the
-    chunks once. Additions optionally carry their event timestamps so a
-    windowed consumer can re-validate backlogged edges against the window.
+    whole chunks to a deque — O(1) per push, whether the chunk is one
+    event (seed-compat API) or a full batch — and a drain consumes whole
+    chunks off the *front*, slicing at most one chunk boundary, so the
+    copy work per pop is O(popped), independent of how deep the backlog
+    is.  (The previous implementation re-concatenated the entire backlog
+    on every pop — O(backlog) per superstep, quadratic over a sustained
+    overload; the scale tier's sweep holds million-edge backlogs, where
+    that is the difference between draining and thrashing.)  Additions
+    optionally carry their event timestamps so a windowed consumer can
+    re-validate backlogged edges against the window.
     """
 
     def __init__(self, a_cap: int = 4096, d_cap: int = 1024):
         self.a_cap = int(a_cap)
         self.d_cap = int(d_cap)
-        self._add_chunks: list = []          # (src, dst, t) int64 triples
-        self._del_chunks: list = []
+        self._add_chunks: Deque = collections.deque()  # (src, dst, t) int64
+        self._del_chunks: Deque = collections.deque()
         self._n_adds = 0
         self._n_dels = 0
+        # elements copied servicing pops — the O(popped) contract is pinned
+        # by tests/test_stream.py against this counter
+        self.copied_elements = 0
 
     # -- producers ---------------------------------------------------------
     def push_edges(self, src: np.ndarray, dst: np.ndarray,
@@ -119,37 +129,56 @@ class EdgeStreamBuffer:
         (capacity backpressure) is already happening."""
         return max(self._n_adds / self.a_cap, self._n_dels / self.d_cap)
 
-    def _consolidate(self) -> None:
-        if len(self._add_chunks) > 1:
-            s, d, t = (np.concatenate(x) for x in zip(*self._add_chunks))
-            self._add_chunks = [(s, d, t)]
-        if len(self._del_chunks) > 1:
-            self._del_chunks = [np.concatenate(self._del_chunks)]
+    def _take_adds(self, want: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Consume up to ``want`` additions off the front, FIFO; copies only
+        the elements returned (a partially-consumed chunk stays queued as a
+        zero-copy view of its tail)."""
+        pieces, got = [], 0
+        while got < want and self._add_chunks:
+            s, d, t = self._add_chunks.popleft()
+            take = min(s.shape[0], want - got)
+            if take < s.shape[0]:
+                self._add_chunks.appendleft((s[take:], d[take:], t[take:]))
+            pieces.append((s[:take], d[:take], t[:take]))
+            got += take
+        self._n_adds -= got
+        self.copied_elements += got
+        if not pieces:
+            return (np.empty((0,), np.int64),) * 3
+        if len(pieces) == 1:
+            return pieces[0]
+        return tuple(np.concatenate(x) for x in zip(*pieces))
+
+    def _take_dels(self, want: int) -> np.ndarray:
+        pieces, got = [], 0
+        while got < want and self._del_chunks:
+            n = self._del_chunks.popleft()
+            take = min(n.shape[0], want - got)
+            if take < n.shape[0]:
+                self._del_chunks.appendleft(n[take:])
+            pieces.append(n[:take])
+            got += take
+        self._n_dels -= got
+        self.copied_elements += got
+        if not pieces:
+            return np.empty((0,), np.int64)
+        return pieces[0] if len(pieces) == 1 else np.concatenate(pieces)
 
     def peek_all(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """The entire queued backlog — (add_src, add_dst, add_t, del_nodes) —
         without dequeueing anything (checkpointing reads this)."""
-        self._consolidate()
-        src, dst, t = (self._add_chunks[0] if self._add_chunks else
-                       (np.empty((0,), np.int64),) * 3)
-        dels = self._del_chunks[0] if self._del_chunks else np.empty((0,), np.int64)
+        src, dst, t = ((np.concatenate(x) for x in zip(*self._add_chunks))
+                       if self._add_chunks else (np.empty((0,), np.int64),) * 3)
+        dels = (np.concatenate(list(self._del_chunks)) if self._del_chunks
+                else np.empty((0,), np.int64))
         return src, dst, t, dels
 
     def pop(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Dequeue up to capacity changes (FIFO): (add_src, add_dst, add_t,
         del_nodes) as host arrays; leftovers stay queued."""
-        self._consolidate()
-        src, dst, t = (self._add_chunks[0] if self._add_chunks else
-                       (np.empty((0,), np.int64),) * 3)
-        dels = self._del_chunks[0] if self._del_chunks else np.empty((0,), np.int64)
-        a = min(src.shape[0], self.a_cap)
-        d = min(dels.shape[0], self.d_cap)
-        out = (src[:a], dst[:a], t[:a], dels[:d])
-        self._add_chunks = [(src[a:], dst[a:], t[a:])] if src.shape[0] > a else []
-        self._del_chunks = [dels[d:]] if dels.shape[0] > d else []
-        self._n_adds -= int(a)
-        self._n_dels -= int(d)
-        return out
+        src, dst, t = self._take_adds(self.a_cap)
+        dels = self._take_dels(self.d_cap)
+        return src, dst, t, dels
 
     def drain(self) -> Tuple[GraphDelta, IngestStats]:
         """Release up to capacity changes as one padded delta (FIFO order)."""

@@ -1,0 +1,357 @@
+"""Scale-tier suite (DESIGN.md §14): streaming generators, chunked BSR,
+overflow guards, and the SystemConfig wiring.
+
+The load-bearing pins:
+
+* chunked ``graph_to_bsr_chunked`` is **bit-identical** to the monolithic
+  ``graph_to_bsr`` (property test over blk / normalize / chunk size);
+* generators replay deterministically per chunk and show a power-law tail;
+* every int32 container on the scale path fails loudly at its boundary
+  instead of wrapping (BSR indices, quota rank keys);
+* a generator-named ``GraphSection`` builds a working session unchanged
+  through both execution backends.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                     # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+import jax
+
+from repro.graph.bsr import check_int32_index, graph_to_bsr
+from repro.graph.structure import from_edges
+from repro.scale import (ChungLuStream, MemoryBudgetError, RmatStream,
+                         chunk_rng, graph_to_bsr_chunked, make_edge_stream,
+                         session_graph, stream_events, stream_to_graph)
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+# ---------------------------------------------------------------------------
+# generators: deterministic replay + power-law shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["rmat", "chung_lu"])
+def test_chunk_replay_is_deterministic(name):
+    st1 = make_edge_stream(name, 4000, avg_degree=6.0, chunk_edges=2048,
+                           seed=11)
+    st2 = make_edge_stream(name, 4000, avg_degree=6.0, chunk_edges=2048,
+                           seed=11)
+    assert st1.num_chunks > 1
+    for i in range(st1.num_chunks):
+        for a, b in zip(st1.chunk(i), st2.chunk(i)):
+            assert np.array_equal(a, b)
+    # chunks are independently regenerable: out-of-order == in-order
+    last = st1.num_chunks - 1
+    tail_first = st1.chunk(last)
+    for a, b in zip(tail_first, st2.chunk(last)):
+        assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("name", ["rmat", "chung_lu"])
+def test_different_seeds_diverge(name):
+    a = make_edge_stream(name, 4000, avg_degree=4.0, seed=1).chunk(0)
+    b = make_edge_stream(name, 4000, avg_degree=4.0, seed=2).chunk(0)
+    assert not (a[0].shape == b[0].shape and np.array_equal(a[0], b[0]))
+
+
+def test_chunks_are_entropy_separated():
+    # chunk i and chunk j draw from disjoint SeedSequence pools
+    r0 = chunk_rng(5, 0).random(8)
+    r1 = chunk_rng(5, 1).random(8)
+    assert not np.array_equal(r0, r1)
+
+
+@pytest.mark.parametrize("name", ["rmat", "chung_lu"])
+def test_degree_distribution_has_power_law_tail(name):
+    n = 20000
+    g = stream_to_graph(make_edge_stream(name, n, avg_degree=8.0, seed=3))
+    deg = np.asarray(g.degrees())
+    deg = deg[deg > 0]
+    mean = deg.mean()
+    # a heavy tail: the max degree is far above the mean (an Erdős–Rényi
+    # graph at this size would have max/mean ≈ 3), and the top percentile
+    # holds a disproportionate share of the edge endpoints
+    assert deg.max() > 10 * mean
+    top = np.sort(deg)[-len(deg) // 100:]
+    assert top.sum() > 0.05 * deg.sum()
+    # log-log tail slope: P(D >= d) for a power law with exponent gamma
+    # decays ~ d^(1-gamma); fit over the upper decade and sanity-bound it
+    ds = np.sort(deg)
+    ccdf = 1.0 - np.arange(len(ds)) / len(ds)
+    lo_d = max(int(mean), 2)
+    sel = (ds >= lo_d) & (ccdf > 1e-4)
+    slope = np.polyfit(np.log(ds[sel]), np.log(ccdf[sel]), 1)[0]
+    assert -4.0 < slope < -0.5, f"tail slope {slope} not power-law-like"
+
+
+def test_stream_to_graph_matches_from_edges():
+    stream = make_edge_stream("rmat", 3000, avg_degree=5.0, chunk_edges=1024,
+                              seed=9)
+    g = stream_to_graph(stream)
+    src = np.concatenate([s for s, _ in stream])
+    dst = np.concatenate([d for _, d in stream])
+    ref = from_edges(src, dst, stream.n)
+    for field in ("src", "dst", "node_mask", "edge_mask"):
+        assert np.array_equal(np.asarray(getattr(g, field)),
+                              np.asarray(getattr(ref, field))), field
+
+
+def test_stream_events_timestamps_advance():
+    stream = make_edge_stream("chung_lu", 1000, avg_degree=4.0,
+                              chunk_edges=512, seed=4)
+    batches = list(stream_events(stream, t0=10, span_per_chunk=5))
+    assert len(batches) == stream.num_chunks
+    t = np.concatenate([b[:, 0] for b in batches])
+    assert np.all(np.diff(t) >= 0) and t[0] == 10
+
+
+# ---------------------------------------------------------------------------
+# chunked BSR: bit-identity, budget, guards
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from([8, 16, 32]),
+       st.sampled_from([None, "sym", "row"]),
+       st.sampled_from([64, 257, 1000]))
+def test_chunked_bsr_bit_identical(seed, blk, normalize, chunk_edges):
+    stream = make_edge_stream("rmat", 700, avg_degree=5.0, seed=seed % 1000)
+    g = stream_to_graph(stream)
+    ref = graph_to_bsr(g, blk=blk, normalize=normalize)
+    out = graph_to_bsr_chunked(g, blk=blk, normalize=normalize,
+                               chunk_edges=chunk_edges)
+    assert np.array_equal(np.asarray(ref.blocks), np.asarray(out.blocks))
+    assert np.array_equal(np.asarray(ref.row_ptr), np.asarray(out.row_ptr))
+    assert np.array_equal(np.asarray(ref.block_cols),
+                          np.asarray(out.block_cols))
+    assert int(ref.nnzb) == int(out.nnzb)
+
+
+def test_chunked_bsr_empty_graph():
+    from repro.api.system import empty_graph
+    g = empty_graph(64, 32)
+    ref = graph_to_bsr(g, blk=8)
+    out = graph_to_bsr_chunked(g, blk=8, chunk_edges=4)
+    assert np.array_equal(np.asarray(ref.blocks), np.asarray(out.blocks))
+    assert int(out.nnzb) == 0
+
+
+def test_chunked_bsr_respects_nnzb_cap():
+    g = stream_to_graph(make_edge_stream("rmat", 500, avg_degree=4.0, seed=1))
+    ref = graph_to_bsr(g, blk=16, nnzb_cap=5000)
+    out = graph_to_bsr_chunked(g, blk=16, nnzb_cap=5000, chunk_edges=100)
+    assert ref.blocks.shape == out.blocks.shape
+    assert np.array_equal(np.asarray(ref.blocks), np.asarray(out.blocks))
+    with pytest.raises(ValueError, match="nnzb_cap"):
+        graph_to_bsr_chunked(g, blk=16, nnzb_cap=1)
+
+
+def test_memory_budget_fails_loudly_before_allocating():
+    g = stream_to_graph(make_edge_stream("rmat", 2000, avg_degree=6.0, seed=2))
+    with pytest.raises(MemoryBudgetError, match="memory_budget"):
+        graph_to_bsr_chunked(g, blk=8, memory_budget=10_000)
+    # a generous budget packs fine
+    out = graph_to_bsr_chunked(g, blk=8, memory_budget=1 << 30)
+    assert int(out.nnzb) > 0
+
+
+def test_int32_guard_boundary():
+    assert check_int32_index(2 ** 31 - 1, "x") == 2 ** 31 - 1
+    with pytest.raises(OverflowError, match="overflows int32"):
+        check_int32_index(2 ** 31, "nnzb")
+
+
+def test_monolithic_bsr_guard_trips_on_impossible_tiling():
+    # n_blocks for a 10M-vertex graph at blk=128 is fine; fabricate the
+    # overflow through the guard (the full graph would not fit in CI)
+    with pytest.raises(OverflowError):
+        check_int32_index((2 ** 33), "n_blocks (tile rows)")
+
+
+# ---------------------------------------------------------------------------
+# quota rank keys: widening + boundary behaviour
+# ---------------------------------------------------------------------------
+
+def test_rank_key_dtype_cascade():
+    import jax.numpy as jnp
+    from repro.core.distributed import rank_key_dtype
+    assert rank_key_dtype(8, 100_000) == jnp.int32
+    assert rank_key_dtype(8, 10_000_000) == jnp.int32     # 6.5e8 keys
+    assert rank_key_dtype(8, 40_000_000) == jnp.uint32    # 2.6e9 keys
+    boundary = (2 ** 31 - 8) // 65                        # k=8: spans 2^31-ish
+    assert rank_key_dtype(8, boundary) == jnp.int32
+    assert rank_key_dtype(8, boundary + 1) == jnp.uint32
+    if jax.dtypes.canonicalize_dtype(jnp.int64) != jnp.int64:
+        with pytest.raises(OverflowError, match="uint32"):
+            rank_key_dtype(32, 1_000_000_000)
+
+
+@needs_devices
+def test_cluster_step_bit_identical_under_uint32_keys():
+    """Forcing the widened key dtype must not change a single admission
+    decision: ranks are dtype-invariant by construction."""
+    import jax.numpy as jnp
+    from repro.api import DynamicGraphSystem, SystemConfig
+    from repro.api.config import ClusterSection, PartitionSection
+
+    def run(key_dtype):
+        import repro.core.distributed as dist
+        cfg = SystemConfig(partition=PartitionSection(k=8, adapt_iters=2),
+                           cluster=ClusterSection(backend="sharded"), seed=3)
+        g = stream_to_graph(make_edge_stream("rmat", 600, avg_degree=5.0,
+                                             seed=5))
+        orig = dist.make_cluster_step
+        if key_dtype is not None:
+            def forced(mesh, **kw):
+                kw["key_dtype"] = key_dtype
+                return orig(mesh, **kw)
+            dist.make_cluster_step = forced
+        try:
+            system = DynamicGraphSystem(g, cfg)
+            system.adapt(3)
+            return np.asarray(system.state.assignment)
+        finally:
+            dist.make_cluster_step = orig
+
+    a32 = run(None)                 # auto (int32 at this size)
+    a_u32 = run(jnp.uint32)         # forced wide path
+    assert np.array_equal(a32, a_u32)
+
+
+# ---------------------------------------------------------------------------
+# SystemConfig wiring: generator sessions through both backends
+# ---------------------------------------------------------------------------
+
+def _gen_cfg(backend="local", n=1500):
+    from repro.api import SystemConfig
+    from repro.api.config import (ClusterSection, GraphSection,
+                                  PartitionSection)
+    return SystemConfig(
+        graph=GraphSection(generator="rmat", n=n, avg_degree=4.0,
+                           chunk_edges=1024),
+        partition=PartitionSection(k=4, adapt_iters=2),
+        cluster=ClusterSection(backend=backend), seed=7)
+
+
+def test_generator_config_round_trips():
+    from repro.api import SystemConfig
+    cfg = _gen_cfg()
+    assert SystemConfig.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(ValueError, match="graph.n >= 2"):
+        from repro.api.config import GraphSection
+        GraphSection(generator="rmat")
+
+
+def test_generator_session_local():
+    from repro.api import DynamicGraphSystem
+    from repro.stream.metrics import cut_ratio_of
+    system = DynamicGraphSystem(config=_gen_cfg())
+    assert int(system.graph.num_nodes) == 1500
+    assert int(system.graph.num_edges) > 1000
+    assert system.graph.e_cap > int(system.graph.num_edges)  # stream head-room
+    before = float(cut_ratio_of(system.tracker))
+    # live events stream in through the unchanged step() path
+    live = make_edge_stream("rmat", 1500, avg_degree=1.0, seed=8)
+    for batch in stream_events(live, t0=1):
+        system.step(batch)
+    system.adapt(4)
+    assert float(cut_ratio_of(system.tracker)) < before
+
+
+def test_generator_session_deterministic_by_seed():
+    from repro.api import DynamicGraphSystem
+    g1 = DynamicGraphSystem(config=_gen_cfg()).graph
+    g2 = DynamicGraphSystem(config=_gen_cfg()).graph
+    assert np.array_equal(np.asarray(g1.src), np.asarray(g2.src))
+
+
+def test_session_graph_respects_explicit_caps():
+    from repro.api.config import GraphSection
+    sec = GraphSection(generator="chung_lu", n=800, avg_degree=4.0,
+                       chunk_edges=512, n_cap=1000, e_cap=5000)
+    g = session_graph(sec, seed=1)
+    assert g.n_cap == 1000 and g.e_cap == 5000
+    with pytest.raises(ValueError, match="capacity too small"):
+        session_graph(GraphSection(generator="chung_lu", n=800,
+                                   avg_degree=4.0, e_cap=3), seed=1)
+
+
+def test_unknown_generator_fails_loudly():
+    with pytest.raises(ValueError, match="unknown scale generator"):
+        make_edge_stream("barabasi", 100)
+
+
+@needs_devices
+def test_generator_session_sharded_matches_local():
+    from repro.api import DynamicGraphSystem
+    local = DynamicGraphSystem(config=_gen_cfg("local", n=800))
+    shard = DynamicGraphSystem(config=_gen_cfg("sharded", n=800))
+    # k=4 <= 8 devices? sharded requires k == devices when devices=0 → k
+    local.adapt(3)
+    shard.adapt(3)
+    assert np.array_equal(np.asarray(local.state.assignment),
+                          np.asarray(shard.state.assignment))
+
+
+# ---------------------------------------------------------------------------
+# sweep result schema
+# ---------------------------------------------------------------------------
+
+def _scale_payload():
+    row = {"vertices": 1000, "backend": "local", "edges": 2000, "events": 500,
+           "supersteps": 3, "migrations": 10, "build_seconds": 0.5,
+           "ingest_events_per_sec": 1e5, "superstep_seconds": 0.1,
+           "adapt_seconds": 0.2, "cut_before": 0.9, "cut_after": 0.4,
+           "bsr": {"nnzb": 4, "blocks_bytes": 262144, "build_seconds": 0.01},
+           "peak_rss_bytes": 1 << 28}
+    return {"bench": "scale_sweep", "generator": "rmat", "k": 8,
+            "chunk_edges": 1024, "sizes": [1000], "backends": ["local"],
+            "rows": [row]}
+
+
+def test_scale_bench_schema_accepts_and_rejects():
+    from repro.obs.schema import SchemaError, validate_scale_bench
+    validate_scale_bench(_scale_payload())
+    # a budget refusal is a legal bsr outcome
+    p = _scale_payload()
+    p["rows"][0]["bsr"] = {"skipped": "memory_budget: needs 3 GiB"}
+    validate_scale_bench(p)
+    # missing cells, zero RSS, and out-of-range cuts all fail loudly
+    p = _scale_payload()
+    p["backends"] = ["local", "sharded"]
+    with pytest.raises(SchemaError, match="cross product"):
+        validate_scale_bench(p)
+    p = _scale_payload()
+    p["rows"][0]["peak_rss_bytes"] = 0
+    with pytest.raises(SchemaError, match="peak_rss_bytes"):
+        validate_scale_bench(p)
+    p = _scale_payload()
+    p["rows"][0]["cut_after"] = 1.5
+    with pytest.raises(SchemaError, match="out of"):
+        validate_scale_bench(p)
+
+
+def test_peak_rss_probe_and_superstep_gauge():
+    from repro.obs.metrics import MetricsRegistry, record_superstep
+    from repro.obs.profiling import memory_probe, peak_rss_bytes
+    assert peak_rss_bytes() > 0
+    probe = memory_probe()
+    assert probe["peak_rss_bytes"] >= (probe["current_rss_bytes"] or 0)
+    from repro.api.telemetry import SuperstepRecord
+    rec = SuperstepRecord(superstep=1, now=0, events=0, adds=0, dels=0,
+                          backlog_adds=0, backlog_dels=0, invalid_events=0,
+                          stale_dropped=0, new_placed=0, migrations=0,
+                          cut_edges=0, live_edges=0, cut_ratio=0.0,
+                          imbalance=1.0, ingest_seconds=0.0,
+                          step_seconds=0.0, drift=None)
+    reg = MetricsRegistry()
+    record_superstep(reg, rec)
+    val = reg.gauge("peak_rss_bytes").values[()]
+    assert val > 0
+    assert "peak_rss_bytes" in reg.to_prometheus()

@@ -2,6 +2,7 @@
 seed per-event path, incremental cut tracking vs. full recompute, online
 placement quality, and capacity backpressure accounting."""
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -13,6 +14,7 @@ from repro.graph.dynamics import ChangeQueue, SlidingWindowGraph
 from repro.graph.structure import Graph, GraphDelta, apply_delta, cut_edges, cut_ratio
 from repro.stream import (StreamConfig, StreamEngine, WindowIngestor,
                           build_delta, place_delta, stream_batches)
+from repro.stream.ingest import EdgeStreamBuffer
 
 
 # --- reference implementation: the seed's per-event Python loops -----------
@@ -293,3 +295,77 @@ def test_engine_matches_sliding_window_graph_topology():
         eng.superstep(events, now)
         swg.advance(events, now)
         assert _graphs_equal(eng.graph, swg.graph)
+
+
+def test_buffer_pop_work_is_linear_in_popped_not_backlog():
+    """The backlog-handling contract (DESIGN.md §14): servicing a pop
+    copies O(popped) elements regardless of backlog depth.  The previous
+    implementation re-concatenated the whole backlog every pop — under a
+    sustained overload (pushes outpacing drains) total copy work grew
+    quadratically.  ``copied_elements`` counts exactly the work done."""
+    a_cap = 512
+    buf = EdgeStreamBuffer(a_cap=a_cap, d_cap=64)
+    rounds, push_per_round = 200, 1024
+    popped = 0
+    for i in range(rounds):
+        e = np.arange(push_per_round, dtype=np.int64)
+        buf.push_edges(e, e + 1, e)          # backlog grows every round
+        src, _, _, _ = buf.pop()
+        popped += src.shape[0]
+    # total work == total popped (here: a_cap per round while backlogged),
+    # NOT O(sum of backlog depths) ≈ rounds²·(push-pop)/2 ≈ 10M elements
+    assert popped == rounds * a_cap
+    assert buf.copied_elements == popped
+    # FIFO survived the deque rework: the next element out is exactly the
+    # (total popped)-th element pushed
+    src, _, _, _ = buf.pop()
+    assert src.shape[0] == a_cap
+    assert src[0] == popped % push_per_round
+
+
+def test_buffer_fifo_across_chunk_boundaries():
+    buf = EdgeStreamBuffer(a_cap=5, d_cap=3)
+    buf.push_edges([0, 1], [10, 11], [100, 101])
+    buf.push_edges([2, 3, 4, 5], [12, 13, 14, 15], [102, 103, 104, 105])
+    buf.push_node_removals([7, 8])
+    buf.push_node_removals([9, 10])
+    src, dst, t, dels = buf.pop()
+    assert src.tolist() == [0, 1, 2, 3, 4]
+    assert dst.tolist() == [10, 11, 12, 13, 14]
+    assert t.tolist() == [100, 101, 102, 103, 104]
+    assert dels.tolist() == [7, 8, 9]
+    assert buf.backlog == (1, 1)
+    src, _, _, dels = buf.pop()
+    assert src.tolist() == [5] and dels.tolist() == [10]
+    assert len(buf) == 0
+
+
+def test_vectorized_ingest_throughput_beats_per_event_loop():
+    """Pin the ROADMAP's "no per-event Python state" constraint with a
+    wall-clock ratio: the vectorized buffer must drain a large batch at
+    least 5x faster than the seed's per-event deque loop (it measures
+    ~100x here; 5x keeps CI noise-proof)."""
+    n_events = 50_000
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, 1000, n_events)
+    v = rng.integers(0, 1000, n_events)
+    t = np.arange(n_events)
+
+    t0 = time.perf_counter()
+    seed_q = _SeedChangeQueue(a_cap=4096, d_cap=64)
+    for i in range(n_events):
+        seed_q.add_edge(int(u[i]), int(v[i]))
+    while seed_q._adds:
+        seed_q.drain()
+    seed_seconds = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    buf = EdgeStreamBuffer(a_cap=4096, d_cap=64)
+    buf.push_edges(u, v, t)
+    while len(buf):
+        buf.pop()
+    vec_seconds = time.perf_counter() - t0
+
+    assert vec_seconds * 5 < seed_seconds, (
+        f"vectorized drain {vec_seconds:.4f}s not 5x faster than "
+        f"per-event loop {seed_seconds:.4f}s")
